@@ -1,0 +1,47 @@
+"""Paper Fig. 3: contention slowdown under various parallelism.
+
+Co-runs 1..4 stages on different PUs in the simulator and reports each
+stage's slowdown vs running alone — the φ(B) behaviour the concurrency
+controller (Eq. 5) is built on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_world
+from repro.core import Config
+
+
+def run(csv=print):
+    soc, gt, perf = make_world("sd8gen4", "qwen3")
+    combos = [
+        ("decode alone", [("chat_decode", "gpu", 16)]),
+        ("decode + embed", [("chat_decode", "gpu", 16),
+                            ("embed", "npu", 32)]),
+        ("decode + embed + search", [("chat_decode", "gpu", 16),
+                                     ("embed", "npu", 32),
+                                     ("vsearch", "cpu", 4096)]),
+        ("2 decodes + embed + search", [("chat_decode", "gpu", 16),
+                                        ("rewrite_decode", "cpu", 16),
+                                        ("embed", "npu", 32),
+                                        ("vsearch", "cpu", 4096)]),
+    ]
+    csv("combo,stage,pu,B_total_gbs,phi,slowdown_pct")
+    rows = []
+    for name, tasks in combos:
+        B = sum(gt.bandwidth(gt.stages[s], soc.pu(p), Config(p, b))
+                for s, p, b in tasks)
+        for s, p, b in tasks:
+            phi = gt.phi(gt.stages[s], B)
+            rows.append((name, s, p, B, phi))
+            csv(f"{name},{s},{p},{B / 1e9:.1f},{phi:.3f},"
+                f"{(phi - 1) * 100:.1f}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 5: end-to-end latency, Qwen3 family — 3 workflows × 4 datasets
+× 2 platforms × 4 strategies."""
+from __future__ import annotations
+
+from benchmarks.common import DATASETS, SOCS, STRATEGIES, mean_latency
+
+FAMILY = "qwen3"
+
+
+def run(csv=print, n: int = 4, datasets=DATASETS, workflows=(1, 2, 3)):
+    csv("platform,dataset,workflow,strategy,latency_s,speedup_vs_gpu")
+    rows = []
+    best = {"gpu": 0.0, "ayo": 0.0}
+    for soc_name in SOCS:
+        for ds in datasets:
+            for wf in workflows:
+                lat = {s: mean_latency(s, soc_name, FAMILY, wf, ds, n=n)
+                       for s in STRATEGIES}
+                for s in STRATEGIES:
+                    csv(f"{soc_name},{ds},W{wf},{s},{lat[s]:.2f},"
+                        f"{lat['llamacpp_gpu'] / lat[s]:.2f}")
+                    rows.append((soc_name, ds, wf, s, lat[s]))
+                best["gpu"] = max(best["gpu"],
+                                  lat["llamacpp_gpu"] / lat["hero"])
+                best["ayo"] = max(best["ayo"],
+                                  lat["ayo_like"] / lat["hero"])
+    csv(f"# max speedup vs llama.cpp-GPU: {best['gpu']:.2f}x "
+        f"(paper: up to 10.94x)")
+    csv(f"# max speedup vs Ayo-like: {best['ayo']:.2f}x "
+        f"(paper: 1.5x text / 3.2x Table 3)")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

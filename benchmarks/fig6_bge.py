@@ -1,0 +1,30 @@
+"""Paper Fig. 6: end-to-end latency, BGE + Llama3 family (8B chat model —
+smaller relative gains than Fig. 5, the paper's model-level analysis)."""
+from __future__ import annotations
+
+from benchmarks.common import DATASETS, SOCS, STRATEGIES, mean_latency
+
+FAMILY = "bge"
+
+
+def run(csv=print, n: int = 4, datasets=DATASETS, workflows=(1, 2, 3)):
+    csv("platform,dataset,workflow,strategy,latency_s,speedup_vs_gpu")
+    rows = []
+    for soc_name in SOCS:
+        for ds in datasets:
+            for wf in workflows:
+                lat = {s: mean_latency(s, soc_name, FAMILY, wf, ds, n=n)
+                       for s in STRATEGIES}
+                for s in STRATEGIES:
+                    csv(f"{soc_name},{ds},W{wf},{s},{lat[s]:.2f},"
+                        f"{lat['llamacpp_gpu'] / lat[s]:.2f}")
+                    rows.append((soc_name, ds, wf, s, lat[s]))
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

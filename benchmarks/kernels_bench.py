@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: reference-path timings on CPU (the Pallas path
+targets TPU; interpret-mode timing is not meaningful) + analytic VMEM
+working-set sizes per kernel block config."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.kernels import ref
+
+
+def run(csv=print):
+    csv("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(key, (1, 512, 8, 64))
+    k = jax.random.normal(key, (1, 512, 4, 64))
+    v = jax.random.normal(key, (1, 512, 4, 64))
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    us = timeit_us(lambda: f(q, k, v).block_until_ready())
+    csv(f"flash_attention_ref_512,{us:.0f},vmem_block_kb="
+        f"{(256 * 64 * 3 * 4 + 256 * 256 * 4) // 1024}")
+
+    qd = jax.random.normal(key, (4, 8, 64))
+    lengths = jnp.array([512, 256, 128, 512], jnp.int32)
+    fd = jax.jit(lambda a, b, c, l: ref.decode_attention_ref(a, b, c, l))
+    us = timeit_us(lambda: fd(qd, k, v, lengths[:1]).block_until_ready())
+    csv(f"decode_attention_ref,{us:.0f},bytes_per_token="
+        f"{2 * 512 * 4 * 64 * 4}")
+
+    from repro.kernels.int8_matmul import quantize_int8
+    x = jax.random.normal(key, (512, 512))
+    xq, sx = quantize_int8(x, 1)
+    wq, sw = quantize_int8(x, 0)
+    fi = jax.jit(lambda a, b, c, d: ref.int8_matmul_ref(a, b, c, d))
+    us = timeit_us(lambda: fi(xq, wq, sx, sw).block_until_ready())
+    csv(f"int8_matmul_ref_512,{us:.0f},mxu_util_target=2x_bf16")
+
+    c = jax.random.normal(key, (8192, 128))
+    qr = jax.random.normal(key, (8, 128))
+    ft = jax.jit(lambda a, b: ref.topk_retrieval_ref(a, b, 16))
+    us = timeit_us(lambda: ft(qr, c)[0].block_until_ready())
+    csv(f"topk_retrieval_ref_8k,{us:.0f},fused_hbm_passes=1")
+    return []
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

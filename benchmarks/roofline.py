@@ -1,0 +1,42 @@
+"""§Roofline: render the dry-run results (results/dryrun.jsonl) as the
+per-(arch × shape × mesh) three-term roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(csv=print, path: str = "results/dryrun.jsonl"):
+    if not os.path.exists(path):
+        csv(f"# {path} missing — run: PYTHONPATH=src python -m "
+            f"repro.launch.dryrun --all --multi-pod both --out {path}")
+        return []
+    csv("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+        "useful_flops_frac,peak_gb_per_dev,fits_16gb,status")
+    rows = []
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] == "skipped":
+            csv(f"{r['arch']},{r['shape']},{r['mesh']},,,,skipped,,,,"
+                f"skipped:{r['reason'][:40]}")
+            continue
+        if r["status"] != "ok":
+            csv(f"{r['arch']},{r['shape']},{r['mesh']},,,,error,,,,error")
+            continue
+        rf = r["roofline"]
+        csv(f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{rf['t_compute_s']:.4f},{rf['t_memory_s']:.4f},"
+            f"{rf['t_collective_s']:.4f},{rf['bottleneck']},"
+            f"{rf['useful_flops_frac']:.3f},"
+            f"{r['memory']['peak_bytes'] / 1e9:.1f},"
+            f"{r['fits_16gb_hbm']},ok")
+        rows.append(r)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

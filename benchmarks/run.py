@@ -1,0 +1,37 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived``-style CSV blocks per section."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_affinity, fig3_contention, fig5_qwen3,
+                            fig6_bge, grid_search, kernels_bench,
+                            multiquery, roofline, table3_ablation)
+    quick = "--quick" in sys.argv
+    sections = [
+        ("Fig2_affinity_shape_sensitivity", fig2_affinity.run, {}),
+        ("Fig3_contention_slowdown", fig3_contention.run, {}),
+        ("Fig5_e2e_latency_qwen3", fig5_qwen3.run,
+         {"n": 2, "datasets": ("finqabench", "2wikimqa")} if quick else {}),
+        ("Fig6_e2e_latency_bge", fig6_bge.run,
+         {"n": 2, "datasets": ("finqabench", "2wikimqa")} if quick else {}),
+        ("Table3_technique_ablation", table3_ablation.run,
+         {"n": 2} if quick else {}),
+        ("GridSearch_alpha_beta (paper §5)", grid_search.run,
+         {"n": 2} if quick else {}),
+        ("MultiQuery_throughput (beyond-paper)", multiquery.run_all, {}),
+        ("Kernel_microbench", kernels_bench.run, {}),
+        ("Roofline_from_dryrun", roofline.run, {}),
+    ]
+    for name, fn, kwargs in sections:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        fn(**kwargs)
+        print(f"# section wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 3: speedup breakdown of the three techniques.
+
+C1: Qwen3 family, Workflow 2, FinqaBench.
+C2: BGE family, Workflow 3, 2WikiMQA.
+Baseline = Ayo-like static mapping; each row adds ONE technique; ALL = HeRo.
+Plus the anti-ablation (HeRo minus concurrency control) showing Eq. 5's
+value inside the full system.
+"""
+from __future__ import annotations
+
+from benchmarks.common import mean_latency
+
+CASES = {"C1": ("qwen3", 2, "finqabench"), "C2": ("bge", 3, "2wikimqa")}
+
+ROWS = {
+    "baseline": ("ayo_like", None),
+    "+partition": ("ayo_like", {"enable_partition": True}),
+    "+criticality": ("ayo_like", {"enable_criticality": True,
+                                  "static_map": None}),
+    "+concurrency": ("ayo_like", {"enable_concurrency": True}),
+    "ALL (HeRo)": ("hero", None),
+    "ALL minus CC": ("hero", {"enable_concurrency": False}),
+}
+
+PAPER = {"C1": {"baseline": 1.0, "+partition": 1.14, "+criticality": 1.37,
+                "+concurrency": 1.25, "ALL (HeRo)": 1.52},
+         "C2": {"baseline": 1.0, "+partition": 1.96, "+criticality": 2.53,
+                "+concurrency": 2.09, "ALL (HeRo)": 3.20}}
+
+
+def run(csv=print, n: int = 5):
+    csv("case,technique,latency_s,speedup,paper_speedup")
+    rows = []
+    for case, (family, wf, ds) in CASES.items():
+        base = None
+        for name, (strategy, overrides) in ROWS.items():
+            lat = mean_latency(strategy, "sd8gen4", family, wf, ds, n=n,
+                               seed=3, overrides=overrides)
+            if base is None:
+                base = lat
+            sp = base / lat
+            paper = PAPER[case].get(name, float("nan"))
+            csv(f"{case},{name},{lat:.2f},{sp:.2f},{paper}")
+            rows.append((case, name, lat, sp))
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Document QA end-to-end driver: the REAL executable pipeline.
+
+Runs the paper's Workflow 2 with actual JAX models (reduced configs on
+CPU): hash tokenizer -> chunker (128/10) -> embedding model -> vector DB
+(fused top-k kernel) -> cross-encoder reranker -> query-rewriter agent ->
+chat generation with KV cache — orchestrated by the HeRo scheduler over
+heterogeneous PU executors with wall-clock dispatch.
+
+    PYTHONPATH=src python examples/document_qa.py
+"""
+import sys
+
+import repro.launch.serve as serve
+
+
+def main():
+    sys.argv = ["document_qa", "--workflow", "2", "--queries", "2",
+                "--dataset", "finqabench"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

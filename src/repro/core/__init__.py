@@ -1,0 +1,9 @@
+# HeRo core: heterogeneous performance modeling + the adaptive online
+# scheduler (paper §3-§4), plus the event-driven validation simulator.
+from repro.core.dag import DynamicDAG, Node, WorkflowTemplate  # noqa: F401
+from repro.core.perf_model import (  # noqa: F401
+    PU, SoCSpec, StageModel, GroundTruthPerf, LinearPerfModel, Config,
+    snapdragon_8gen3, snapdragon_8gen4, tpu_v5e_slices)
+from repro.core.scheduler import (  # noqa: F401
+    HeroScheduler, SchedulerConfig, strategy_config)
+from repro.core.simulator import Simulator, SimResult  # noqa: F401

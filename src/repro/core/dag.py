@@ -1,0 +1,172 @@
+"""Dynamic RAG task graph with partial observability (paper §3.1).
+
+Nodes are *sub-stages*.  The graph evolves at runtime: when a decision
+stage finishes, its ``expander`` callback may add new nodes/edges
+(G_obs(t) ⊆ G) — e.g. a query rewriter emitting N search sub-queries, or a
+search planner spawning web-search + refine branches.  The scheduler only
+ever sees the observed graph.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
+
+PENDING, READY, RUNNING, DONE = "pending", "ready", "running", "done"
+
+
+@dataclass
+class Node:
+    id: str
+    stage: str                       # perf-model key (StageModel name)
+    kind: str                        # batchable | stream_prefill | stream_decode | search | io
+    workload: int                    # L: items (batchable) / tokens (stream)
+    deps: Set[str] = field(default_factory=set)
+    # template stage id for the future-criticality prior
+    template: Optional[str] = None
+    # called on completion; may mutate the DAG (dynamic dependencies)
+    expander: Optional[Callable[["DynamicDAG", "Node"], None]] = None
+    # partitioning: sub-stages created from this node share its group
+    group: Optional[str] = None
+    # --- runtime state ---
+    status: str = PENDING
+    config: Optional[Any] = None     # chosen (pu, batch)
+    start: float = -1.0
+    finish: float = -1.0
+    remaining: float = 0.0           # simulator bookkeeping
+    criticality: float = 0.0
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+
+class DynamicDAG:
+    def __init__(self):
+        self.nodes: Dict[str, Node] = {}
+        self._succ: Dict[str, Set[str]] = {}
+        self._ids = itertools.count()
+
+    # -- construction -------------------------------------------------------
+    def add(self, node: Node) -> Node:
+        assert node.id not in self.nodes, node.id
+        self.nodes[node.id] = node
+        self._succ.setdefault(node.id, set())
+        for d in node.deps:
+            assert d in self.nodes, f"dep {d} of {node.id} not materialized"
+            self._succ.setdefault(d, set()).add(node.id)
+        self._refresh_status(node)
+        return node
+
+    def fresh_id(self, prefix: str) -> str:
+        return f"{prefix}#{next(self._ids)}"
+
+    def add_edge(self, src: str, dst: str):
+        self.nodes[dst].deps.add(src)
+        self._succ.setdefault(src, set()).add(dst)
+        self._refresh_status(self.nodes[dst])
+
+    def retarget_dep(self, node_id: str, old_dep: str, new_dep: str):
+        """Replace one dependency of ``node_id`` (chunked-prefill chains)."""
+        n = self.nodes[node_id]
+        n.deps.discard(old_dep)
+        self._succ.get(old_dep, set()).discard(node_id)
+        self.add_edge(new_dep, node_id)
+
+    # -- state --------------------------------------------------------------
+    def _refresh_status(self, node: Node):
+        if node.status in (RUNNING, DONE):
+            return
+        if all(self.nodes[d].status == DONE for d in node.deps):
+            node.status = READY
+        else:
+            node.status = PENDING
+
+    def ready(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.status == READY]
+
+    def running(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.status == RUNNING]
+
+    def unfinished(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.status != DONE]
+
+    def successors(self, nid: str) -> List[Node]:
+        return [self.nodes[s] for s in self._succ.get(nid, ())]
+
+    def mark_running(self, nid: str, t: float, config):
+        n = self.nodes[nid]
+        n.status, n.start, n.config = RUNNING, t, config
+
+    def mark_done(self, nid: str, t: float):
+        n = self.nodes[nid]
+        n.status, n.finish = DONE, t
+        # dynamic dependencies: expansion happens *before* dependents are
+        # released, so newly-created upstream work is observed atomically
+        if n.expander is not None:
+            n.expander(self, n)
+            n.expander = None
+        for s in self._succ.get(nid, ()):
+            self._refresh_status(self.nodes[s])
+
+    # -- analysis ------------------------------------------------------------
+    def topo_order(self) -> List[Node]:
+        indeg = {nid: len(n.deps) for nid, n in self.nodes.items()}
+        queue = [nid for nid, d in indeg.items() if d == 0]
+        out = []
+        while queue:
+            nid = queue.pop()
+            out.append(self.nodes[nid])
+            for s in self._succ.get(nid, ()):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    queue.append(s)
+        assert len(out) == len(self.nodes), "cycle in DAG"
+        return out
+
+    def makespan(self) -> float:
+        return max((n.finish for n in self.nodes.values()
+                    if n.status == DONE), default=0.0)
+
+
+@dataclass
+class WorkflowTemplate:
+    """The predefined workflow graph used for the future-criticality term
+    CS_F (paper Eq. 4): template stages with activation likelihoods and
+    expected downstream workloads, updated from history."""
+
+    stages: Dict[str, "TemplateStage"] = field(default_factory=dict)
+
+    def add_stage(self, sid: str, stage: str, kind: str, mean_workload: float,
+                  prob: float, deps: Sequence[str] = ()):
+        self.stages[sid] = TemplateStage(sid, stage, kind, mean_workload,
+                                         prob, set(deps))
+
+    def descendants(self, sid: str) -> List["TemplateStage"]:
+        out, seen = [], set()
+        frontier = [sid]
+        while frontier:
+            cur = frontier.pop()
+            for s in self.stages.values():
+                if cur in s.deps and s.id not in seen:
+                    seen.add(s.id)
+                    out.append(s)
+                    frontier.append(s.id)
+        return out
+
+    def update_history(self, template_id: str, activated: bool,
+                       workload: float = 0.0, ema: float = 0.1):
+        """Online prior update (historical averages, §4.2)."""
+        s = self.stages.get(template_id)
+        if s is None:
+            return
+        s.prob = (1 - ema) * s.prob + ema * (1.0 if activated else 0.0)
+        if activated and workload > 0:
+            s.mean_workload = (1 - ema) * s.mean_workload + ema * workload
+
+
+@dataclass
+class TemplateStage:
+    id: str
+    stage: str                 # perf-model key
+    kind: str
+    mean_workload: float
+    prob: float                # historical activation likelihood
+    deps: Set[str]

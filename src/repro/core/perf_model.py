@@ -1,0 +1,411 @@
+"""Heterogeneous performance models (paper §3.2).
+
+Three layers, faithful to the paper's methodology:
+
+1. **Ground-truth hardware model** — an analytic roofline cost per
+   (stage, PU, shape) built from the PU specs (Table 2 SoCs, or TPU-v5e
+   slices) plus per-PU efficiency curves and per-invocation overheads.
+   This is what the *simulator* executes (it plays the role of the phone).
+
+2. **Profiled estimates** — the paper profiles sampled measurements and
+   fits a multi-feature linear regression (§5, following Band/CoDL).  We do
+   exactly that: sample the ground truth on a grid of (workload size, batch
+   shape, background bandwidth) and fit ``p^0_v(c)``, ``b_v(c)`` and
+   ``φ_v(B)``.  The *scheduler* only ever sees these fitted estimates, so
+   modeling error is part of the evaluation, as on real hardware.
+
+3. **Contention model** — ``φ_v(B)``: monotone slowdown in aggregate
+   bandwidth demand ``B(t)``; per-stage sensitivity (Eq. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# processing units
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PU:
+    """One processing unit (mobile accelerator or TPU mesh slice)."""
+
+    name: str
+    kind: str                  # cpu | gpu | npu | tpu_slice | io
+    peak_flops: float          # effective FLOP/s at the stage dtype
+    # fraction of DRAM bandwidth this PU can pull when alone
+    mem_bw: float              # bytes/s
+    # per-invocation overhead (s): graph launch / shape switch
+    overhead: float = 1e-4
+    # extra overhead per *token step* for streaming decode (NPU pays shape
+    # switches per step; this is what makes generation GPU-affine, Fig. 2)
+    step_overhead: float = 0.0
+    # compute efficiency by workload kind
+    eff_batch: float = 0.5     # batchable fixed-shape stages
+    eff_stream: float = 0.5    # autoregressive decode
+    # effective DRAM-bandwidth utilization for token-by-token streaming
+    # (NPU runtimes pay per-step graph swaps + dequant pipeline stalls —
+    # this is what makes LLM *generation* GPU-affine, Fig. 2, and why
+    # mllm.npu-style systems decode off-NPU)
+    mem_eff_stream: float = 0.85
+    # native tile size: batch shapes off the tile grid lose efficiency
+    # (shape sensitivity, Fig. 2) — sawtooth efficiency curve
+    tile: int = 8
+    tile_penalty: float = 0.35
+    # batch sweet spot: beyond it, per-item efficiency *degrades* (compiled-
+    # graph pipelining breaks, activations spill on-chip memory) — Fig. 2's
+    # "larger batches do not always yield better per-item efficiency".
+    batch_sweet: int = 64
+    spill: float = 0.5
+
+
+@dataclass(frozen=True)
+class SoCSpec:
+    name: str
+    pus: Tuple[PU, ...]
+    dram_bw: float             # shared B0, bytes/s
+    # φ shape parameters: φ(B) = 1 + gamma * max(0, B/B0 - knee)^2
+    phi_knee: float = 0.20
+    phi_gamma: float = 3.0
+
+    def pu(self, name: str) -> PU:
+        for p in self.pus:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+
+def snapdragon_8gen3() -> SoCSpec:
+    """Redmi K80 (Table 2).  FLOPs are INT8-effective (models are INT8)."""
+    bw = 76.8e9
+    return SoCSpec(
+        name="sd8gen3",
+        pus=(
+            PU("cpu", "cpu", peak_flops=140e9, mem_bw=0.55 * bw,
+               overhead=3e-5, step_overhead=1e-5, eff_batch=0.55,
+               eff_stream=0.60, mem_eff_stream=0.70, tile=4,
+               tile_penalty=0.15, batch_sweet=128, spill=0.15),
+            PU("gpu", "gpu", peak_flops=2.8e12, mem_bw=0.80 * bw,
+               overhead=8e-4, step_overhead=2e-4, eff_batch=0.15,
+               eff_stream=0.50, mem_eff_stream=0.35, tile=16,
+               tile_penalty=0.30, batch_sweet=48, spill=0.55),
+            PU("npu", "npu", peak_flops=34e12, mem_bw=0.85 * bw,
+               overhead=4e-3, step_overhead=3e-3, eff_batch=0.52,
+               eff_stream=0.30, mem_eff_stream=0.30, tile=32,
+               tile_penalty=0.45, batch_sweet=32, spill=0.85),
+        ),
+        dram_bw=bw)
+
+
+def snapdragon_8gen4() -> SoCSpec:
+    """OnePlus 13 / 8 Elite (Table 2)."""
+    bw = 84.8e9
+    return SoCSpec(
+        name="sd8gen4",
+        pus=(
+            PU("cpu", "cpu", peak_flops=210e9, mem_bw=0.55 * bw,
+               overhead=2.5e-5, step_overhead=8e-6, eff_batch=0.58,
+               eff_stream=0.62, mem_eff_stream=0.75, tile=4,
+               tile_penalty=0.15, batch_sweet=128, spill=0.15),
+            PU("gpu", "gpu", peak_flops=3.4e12, mem_bw=0.80 * bw,
+               overhead=7e-4, step_overhead=1.6e-4, eff_batch=0.22,
+               eff_stream=0.52, mem_eff_stream=0.50, tile=16,
+               tile_penalty=0.30, batch_sweet=48, spill=0.55),
+            PU("npu", "npu", peak_flops=50e12, mem_bw=0.85 * bw,
+               overhead=3.5e-3, step_overhead=2.5e-3, eff_batch=0.55,
+               eff_stream=0.32, mem_eff_stream=0.30, tile=32,
+               tile_penalty=0.45, batch_sweet=32, spill=0.85),
+        ),
+        dram_bw=bw)
+
+
+def tpu_v5e_slices(slices: Dict[str, int]) -> SoCSpec:
+    """TPU deployment: PU groups = disjoint mesh slices of a v5e pod.
+
+    slices: {"slice_name": n_chips}.  The shared domain here is the pod's
+    host-DMA/ICI fabric for inter-stage tensor handoff; per-chip HBM scales
+    with the slice, so mem_bw = chips * 819 GB/s.
+    """
+    pus = []
+    for name, chips in slices.items():
+        pus.append(PU(
+            name, "tpu_slice",
+            peak_flops=chips * 394e12,     # int8 ~= 2x bf16 197 TFLOP/s
+            mem_bw=chips * 819e9,
+            overhead=2e-5 + 3e-6 * chips,  # dispatch + sync grows with slice
+            step_overhead=6e-6,
+            eff_batch=0.55, eff_stream=0.45, tile=8 * chips,
+            tile_penalty=0.30))
+    # inter-slice fabric ~ 50 GB/s/link * bisection links of smallest slice
+    fabric = 50e9 * max(4, min(slices.values()))
+    return SoCSpec(name="tpu_v5e_pod", pus=tuple(pus), dram_bw=fabric,
+                   phi_knee=0.7, phi_gamma=4.0)
+
+
+# ---------------------------------------------------------------------------
+# stage workload characterization
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StageModel:
+    """Static description of one RAG stage's compute (from its ModelConfig)."""
+
+    name: str                   # e.g. "qwen3-embedding-0.6b"
+    params: int                 # parameter count
+    d_model: int
+    kind: str                   # "batchable" | "stream_prefill" | "stream_decode" | "search" | "io"
+    bytes_per_param: float = 1.0   # INT8
+    # batchable: per-item token count; streaming: tokens handled elsewhere
+    item_tokens: int = 128
+
+    def flops(self, n_items: int, tokens: Optional[int] = None) -> float:
+        t = tokens if tokens is not None else n_items * self.item_tokens
+        if self.kind == "search":
+            # vector search: 2*N*d per query (n_items = corpus size)
+            return 2.0 * n_items * self.d_model
+        return 2.0 * self.params * t
+
+    def bytes_moved(self, n_items: int, tokens: Optional[int] = None) -> float:
+        w = self.params * self.bytes_per_param
+        if self.kind == "search":
+            return n_items * self.d_model * 1.0  # int8 corpus scan
+        if self.kind == "stream_decode":
+            t = tokens if tokens is not None else n_items
+            return w * t               # weights re-read per token step
+        return w + (tokens or n_items * self.item_tokens) * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# ground-truth cost model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Config:
+    """One scheduling configuration c ∈ C_v: target PU + workload shape."""
+    pu: str
+    batch: int                  # items (batchable) or token-group size (stream)
+
+
+def _shape_eff(pu: PU, batch: int) -> float:
+    """Sawtooth tiling efficiency + large-batch spill (Fig. 2)."""
+    if batch <= 0:
+        return 1.0
+    rem = batch % pu.tile
+    eff = 1.0 if rem == 0 else 1.0 - pu.tile_penalty * (1.0 - rem / pu.tile)
+    if batch > pu.batch_sweet:
+        eff *= (pu.batch_sweet / batch) ** pu.spill
+    return eff
+
+
+class GroundTruthPerf:
+    """Analytic p0 / bandwidth per (stage, PU, shape) — simulator substrate."""
+
+    def __init__(self, soc: SoCSpec, stages: Dict[str, StageModel]):
+        self.soc = soc
+        self.stages = stages
+
+    def supported(self, stage: StageModel, pu: PU) -> bool:
+        if stage.kind == "io":
+            return pu.kind == "io"
+        if pu.kind == "io":
+            return False
+        if stage.kind == "search" and pu.kind == "npu":
+            return False           # FAISS-style scan not NPU-supported (§6.1)
+        return True
+
+    def p0(self, stage: StageModel, pu: PU, c: Config,
+           tokens: Optional[int] = None) -> float:
+        """Base latency of ONE sub-stage pass at batch c.batch."""
+        if stage.kind == "io":
+            return 0.35            # web search round trip (s)
+        n = c.batch
+        eff = _shape_eff(pu, n)
+        if stage.kind == "batchable":
+            fl = stage.flops(n)
+            by = stage.bytes_moved(n)
+            t = max(fl / (pu.peak_flops * pu.eff_batch * eff),
+                    by / pu.mem_bw)
+            return t + pu.overhead
+        if stage.kind == "stream_prefill":
+            t_tok = tokens if tokens is not None else n
+            fl = stage.flops(1, t_tok)
+            by = stage.params * stage.bytes_per_param
+            t = max(fl / (pu.peak_flops * pu.eff_batch * eff),
+                    by / pu.mem_bw)
+            return t + pu.overhead
+        if stage.kind == "stream_decode":
+            # token-group of size n: memory-bound weight sweep per token
+            by = stage.params * stage.bytes_per_param * n
+            fl = stage.flops(1, n)
+            t = max(fl / (pu.peak_flops * pu.eff_stream),
+                    by / (pu.mem_bw * pu.mem_eff_stream))
+            return t + pu.overhead + pu.step_overhead * n
+        if stage.kind == "search":
+            by = stage.bytes_moved(n)
+            return by / min(pu.mem_bw, self.soc.dram_bw) + pu.overhead
+        raise ValueError(stage.kind)
+
+    def bandwidth(self, stage: StageModel, pu: PU, c: Config,
+                  tokens: Optional[int] = None) -> float:
+        """Average demand b_v(c) on the SHARED domain, bytes/s.
+
+        Mobile SoC: all PU traffic hits the unified DRAM -> full bytes.
+        TPU slices: HBM is slice-private; only inter-stage activation
+        handoff crosses the shared fabric."""
+        if stage.kind == "io":
+            return 0.0
+        t = self.p0(stage, pu, c, tokens)
+        if pu.kind == "tpu_slice":
+            acts = (tokens or c.batch * max(stage.item_tokens, 1)) \
+                * max(stage.d_model, 1) * 2.0
+            return acts / max(t, 1e-9)
+        if stage.kind in ("batchable", "stream_prefill"):
+            by = stage.bytes_moved(c.batch, tokens)
+        elif stage.kind == "stream_decode":
+            by = stage.params * stage.bytes_per_param * c.batch
+        else:
+            by = stage.bytes_moved(c.batch, tokens)
+        return by / max(t, 1e-9)
+
+    def phi(self, stage: StageModel, B: float) -> float:
+        """Contention slowdown φ_v(B) ≥ 1 (Eq. 1)."""
+        soc = self.soc
+        x = B / soc.dram_bw
+        base = 1.0 + soc.phi_gamma * max(0.0, x - soc.phi_knee) ** 2
+        # memory-bound stages feel contention harder
+        sens = {"stream_decode": 1.6, "search": 1.4, "batchable": 1.0,
+                "stream_prefill": 0.8, "io": 0.0}[stage.kind]
+        return 1.0 + (base - 1.0) * sens
+
+
+# ---------------------------------------------------------------------------
+# profiled (regression) estimates — what the scheduler sees (§5)
+# ---------------------------------------------------------------------------
+
+class LinearPerfModel:
+    """Profiled estimates, as in the paper (§5, after Band [13]/CoDL [14]):
+    the offline-profiled candidate set N_{m,k} keeps its *measured* values
+    in a lookup table; a multi-feature linear regression interpolates the
+    irregular (off-grid) workload sizes."""
+
+    def __init__(self):
+        self.coef: Dict[Tuple[str, str], np.ndarray] = {}
+        self.bw_coef: Dict[Tuple[str, str], np.ndarray] = {}
+        self.phi_coef: Dict[str, np.ndarray] = {}
+        self.table: Dict[Tuple[str, str], Dict[int, Tuple[float, float]]] = {}
+
+    @staticmethod
+    def _feats(n: np.ndarray, tile: int) -> np.ndarray:
+        """Features for the log-space linear fit: latency curves span 4+
+        orders of magnitude across batch sizes, so the regression targets
+        log(p0) — positive by construction, multiplicatively accurate."""
+        n = np.asarray(n, dtype=np.float64)
+        frac = (n % tile) / max(tile, 1)
+        ln = np.log(np.maximum(n, 1.0))
+        return np.stack([np.ones_like(n), ln, ln * ln, frac], axis=-1)
+
+    def fit(self, gt: GroundTruthPerf,
+            batch_grid: Sequence[int] = (1, 2, 4, 8, 16, 24, 32, 48, 64, 96,
+                                         128, 192, 256),
+            bw_grid: Optional[Sequence[float]] = None,
+            noise: float = 0.0, seed: int = 0) -> "LinearPerfModel":
+        rng = np.random.default_rng(seed)
+        for sname, stage in gt.stages.items():
+            for pu in gt.soc.pus:
+                if not gt.supported(stage, pu):
+                    continue
+                ns = np.array(batch_grid)
+                ys, bs = [], []
+                tab: Dict[int, Tuple[float, float]] = {}
+                for n in ns:
+                    c = Config(pu.name, int(n))
+                    y = gt.p0(stage, pu, c)
+                    b = gt.bandwidth(stage, pu, c)
+                    if noise:
+                        y *= float(1 + rng.normal(0, noise))
+                        b *= float(1 + rng.normal(0, noise))
+                    ys.append(y)
+                    bs.append(b)
+                    tab[int(n)] = (y, b)
+                self.table[(sname, pu.name)] = tab
+                X = self._feats(ns, pu.tile)
+                self.coef[(sname, pu.name)] = np.linalg.lstsq(
+                    X, np.log(np.maximum(ys, 1e-9)), rcond=None)[0]
+                self.bw_coef[(sname, pu.name)] = np.linalg.lstsq(
+                    X, np.log(np.maximum(bs, 1e-3)), rcond=None)[0]
+            # φ: quadratic fit in B/B0 above the knee
+            Bs = np.linspace(0, 1.6 * gt.soc.dram_bw, 24)
+            phis = np.array([gt.phi(stage, B) for B in Bs])
+            Xp = np.stack([np.ones_like(Bs), Bs / gt.soc.dram_bw,
+                           (Bs / gt.soc.dram_bw) ** 2], axis=-1)
+            self.phi_coef[sname] = np.linalg.lstsq(Xp, phis, rcond=None)[0]
+        self._tiles = {pu.name: pu.tile for pu in gt.soc.pus}
+        self._b0 = gt.soc.dram_bw
+        return self
+
+    def supported(self, stage: str, pu: str) -> bool:
+        return (stage, pu) in self.coef
+
+    # -- persistence (ship profiles with a deployment, paper §5) ----------
+    def save(self, path: str) -> None:
+        import json
+        blob = {
+            "coef": {f"{s}|{p}": c.tolist() for (s, p), c in
+                     self.coef.items()},
+            "bw_coef": {f"{s}|{p}": c.tolist() for (s, p), c in
+                        self.bw_coef.items()},
+            "phi_coef": {s: c.tolist() for s, c in self.phi_coef.items()},
+            "table": {f"{s}|{p}": {str(n): v for n, v in tab.items()}
+                      for (s, p), tab in self.table.items()},
+            "tiles": self._tiles, "b0": self._b0,
+        }
+        with open(path, "w") as f:
+            json.dump(blob, f)
+
+    @classmethod
+    def load(cls, path: str) -> "LinearPerfModel":
+        import json
+        with open(path) as f:
+            blob = json.load(f)
+        m = cls()
+        m.coef = {tuple(k.split("|")): np.array(v)
+                  for k, v in blob["coef"].items()}
+        m.bw_coef = {tuple(k.split("|")): np.array(v)
+                     for k, v in blob["bw_coef"].items()}
+        m.phi_coef = {k: np.array(v) for k, v in blob["phi_coef"].items()}
+        m.table = {tuple(k.split("|")): {int(n): tuple(v)
+                                         for n, v in tab.items()}
+                   for k, tab in blob["table"].items()}
+        m._tiles = blob["tiles"]
+        m._b0 = blob["b0"]
+        return m
+
+    def p0(self, stage: str, pu: str, batch: int) -> float:
+        hit = self.table.get((stage, pu), {}).get(int(batch))
+        if hit is not None:
+            return hit[0]                    # profiled grid point: exact
+        X = self._feats(np.array([batch]), self._tiles[pu])
+        return float(np.exp((X @ self.coef[(stage, pu)])[0]))
+
+    def bandwidth(self, stage: str, pu: str, batch: int) -> float:
+        hit = self.table.get((stage, pu), {}).get(int(batch))
+        if hit is not None:
+            return hit[1]
+        X = self._feats(np.array([batch]), self._tiles[pu])
+        return float(np.exp((X @ self.bw_coef[(stage, pu)])[0]))
+
+    def phi(self, stage: str, B: float) -> float:
+        """Monotone projection of the fitted quadratic: a convex parabola is
+        flat at its minimum below the vertex (the ground truth is monotone;
+        the raw fit may dip)."""
+        c0, c1, c2 = self.phi_coef[stage]
+        x = B / self._b0
+        if c2 > 1e-12:
+            x = max(x, -c1 / (2 * c2))
+        val = c0 + c1 * x + c2 * x * x
+        return float(max(1.0, val))

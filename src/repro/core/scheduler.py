@@ -1,0 +1,274 @@
+"""HeRo online heterogeneous scheduler — paper Alg. 1.
+
+Node-centric dispatch: at every scheduling point (a completion event, or
+new work arriving), the scheduler walks the ready set in criticality order
+(Eq. 4), enumerates shape-aware configs per capable idle PU (Eq. 3), prunes
+those violating the soft bandwidth budget, scores the rest with the
+contention penalty (Eq. 5), and dispatches the argmin.  If the most
+critical node has no feasible config it is deferred and the next one tried.
+
+The three techniques toggle independently (``SchedulerConfig``) which is
+exactly what Table 3 ablates:
+  - enable_partition    → Eq. 3 sub-stage partitioning
+  - enable_criticality  → Eq. 4 priority (off = FIFO + earliest-finish)
+  - enable_concurrency  → Eq. 5 penalty + B_soft gate (off = always admit)
+``static_map`` pins stages to PUs (the llama.cpp-GPU / Powerserve-NPU /
+Ayo-like baselines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import concurrency as cc
+from repro.core import criticality as crit
+from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
+from repro.core.partitioner import shape_aware_configs
+from repro.core.perf_model import LinearPerfModel
+
+
+@dataclass
+class SchedulerConfig:
+    alpha: float = 0.35            # contention-penalty weight (grid-searched)
+    beta: float = 0.6              # future-criticality weight (grid-searched)
+    b_soft_frac: float = 0.90      # B_soft = frac · B0
+    enable_partition: bool = True
+    enable_criticality: bool = True
+    enable_concurrency: bool = True
+    static_map: Optional[Dict[str, str]] = None    # stage -> pu name
+    token_group: int = 16
+    # fault tolerance: re-dispatch a node when its runtime exceeds
+    # straggler_factor × predicted latency (speculative execution)
+    straggler_factor: float = 3.0
+
+
+@dataclass
+class Dispatch:
+    node: Node
+    pu: str
+    batch: int
+    predicted_p0: float
+    bandwidth: float
+
+
+class HeroScheduler:
+    def __init__(self, perf: LinearPerfModel, pus: Sequence[str], b0: float,
+                 cfg: SchedulerConfig = SchedulerConfig(),
+                 template: Optional[WorkflowTemplate] = None):
+        self.perf = perf
+        self.pus: List[str] = list(pus)      # elastic: may grow/shrink
+        self.b0 = b0
+        self.cfg = cfg
+        self.template = template
+        self._fifo_seq: Dict[str, int] = {}
+        self._seq = 0
+
+    # -- elastic PU membership (fault tolerance / scale up-down) -----------
+    def add_pu(self, pu: str):
+        if pu not in self.pus:
+            self.pus.append(pu)
+
+    def remove_pu(self, pu: str):
+        if pu in self.pus:
+            self.pus.remove(pu)
+
+    # -- Alg. 1 -------------------------------------------------------------
+    def dispatch_pass(self, dag: DynamicDAG, now: float,
+                      idle_pus: Sequence[str], B_now: float,
+                      busy_until: Optional[Dict[str, float]] = None,
+                      ) -> List[Dispatch]:
+        """One scheduling step.  ``busy_until``: estimated release time per
+        busy PU — predicted completion F_v(c) is queue-aware, so a critical
+        node *defers* for a fast busy PU instead of grabbing a slow idle one
+        (the paper's "each stage executes on a single PU" default emerges
+        from this, with migration only when genuinely beneficial)."""
+        cfgn = self.cfg
+        crit.update_criticality(dag, self.perf, self.template, now,
+                                beta=cfgn.beta if cfgn.enable_criticality
+                                else 0.0)                       # line 4
+        for n in dag.ready():
+            if n.id not in self._fifo_seq:
+                self._fifo_seq[n.id] = self._seq
+                self._seq += 1
+
+        idle = [p for p in idle_pus if p in self.pus or p == "io"]
+        busy_until = dict(busy_until or {})
+        r_tmp = list(dag.ready())                               # line 5
+        decisions: List[Dispatch] = []
+        b_soft = cfgn.b_soft_frac * self.b0
+
+        while idle and r_tmp:                                   # line 6
+            pool = dag.ready() + dag.running()
+            v_star = max(pool, key=lambda n: n.criticality,
+                         default=None) if pool else None        # line 7
+            running_star = (v_star if v_star is not None
+                            and v_star.status == "running" else
+                            next(iter(sorted(dag.running(),
+                                             key=lambda n: -n.criticality)),
+                                 None))
+            if cfgn.enable_criticality:
+                v_cand = max(r_tmp, key=lambda n: n.criticality)  # line 8
+            else:
+                v_cand = min(r_tmp, key=lambda n: self._fifo_seq.get(n.id, 0))
+
+            if v_cand.kind == "io":
+                # external calls bypass the PU perf model entirely
+                if "io" in idle:
+                    dag.mark_running(v_cand.id, now, ("io", 1))
+                    decisions.append(Dispatch(v_cand, "io", 1, 0.35, 0.0))
+                    idle.remove("io")
+                r_tmp.remove(v_cand)
+                continue
+
+            best: Optional[Tuple[float, Dispatch, bool]] = None
+            capable = self._capable_pus(v_cand, idle + list(busy_until))
+            for pu in capable:                                  # line 9
+                is_idle = pu in idle
+                start = now if is_idle else max(now, busy_until[pu])
+                for batch in self._configs(v_cand, pu):         # line 10
+                    b = self.perf.bandwidth(v_cand.stage, pu, batch)
+                    b_active = B_now + sum(x.bandwidth for x in decisions)
+                    if is_idle and cfgn.enable_concurrency and \
+                            b_active > 0 and cc.violates_budget(
+                                b_active, b, b_soft):           # line 11
+                        # (gate only actual *concurrency*: a lone stage may
+                        # exceed B_soft — waiting cannot help it)
+                        continue
+                    p0 = self.perf.p0(v_cand.stage, pu, batch)
+                    phi = self.perf.phi(v_cand.stage, B_now + b)
+                    passes = -(-max(v_cand.workload, 1) // max(batch, 1))
+                    f_cand = start + passes * p0 * phi          # line 12 (Eq. 2)
+                    w_b = cc.contention_penalty(
+                        self.perf, running_star, b, B_now, now
+                    ) if (cfgn.enable_concurrency and is_idle) else 0.0
+                    score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
+                    d = Dispatch(v_cand, pu, batch, p0, b)
+                    if best is None or score < best[0]:
+                        best = (score, d, is_idle)
+            if best is None or not best[2]:                     # line 15
+                # infeasible now, or better to queue for a busy PU: defer
+                r_tmp.remove(v_cand)
+                continue
+            _, d, _ = best
+            if (cfgn.enable_concurrency and running_star is not None
+                    and running_star.id != d.node.id
+                    and running_star.config
+                    and running_star.config[0] != "io"):
+                # Eq. 5 admission gate: parallelism is admitted only when it
+                # does not significantly impede critical-path progress —
+                # defer when the contention damage to v* exceeds the overlap
+                # benefit (the candidate's own runtime).
+                phi0 = self.perf.phi(running_star.stage, B_now)
+                phi1 = self.perf.phi(running_star.stage,
+                                     B_now + d.bandwidth)
+                sp, sb = running_star.config
+                p_star = self.perf.p0(running_star.stage, sp, sb) *                     -(-max(running_star.workload, 1) // max(sb, 1))
+                damage = (phi1 - phi0) * p_star
+                benefit = d.predicted_p0 * -(-max(d.node.workload, 1)
+                                             // max(d.batch, 1))
+                if cfgn.alpha * damage > benefit:
+                    r_tmp.remove(v_cand)
+                    continue
+            piece = self._take_substage(dag, d.node, d.batch)   # Eq. 3 split
+            d = dataclasses.replace(d, node=piece)
+            dag.mark_running(piece.id, now, (d.pu, d.batch))    # line 17
+            decisions.append(d)
+            idle.remove(d.pu)                                   # line 18-19
+            passes = -(-max(piece.workload, 1) // max(d.batch, 1))
+            busy_until[d.pu] = now + passes * d.predicted_p0
+            r_tmp = [n for n in dag.ready() if n not in
+                     [x.node for x in decisions]]
+        return decisions
+
+    # -- helpers -------------------------------------------------------------
+    def _capable_pus(self, node: Node, idle: Sequence[str]) -> List[str]:
+        if node.kind == "io":
+            return ["io"] if "io" in idle else []
+        if self.cfg.static_map is not None:
+            pinned = self.cfg.static_map.get(node.stage)
+            if pinned is not None:
+                return [pinned] if pinned in idle else []
+        return [p for p in idle
+                if p != "io" and self.perf.supported(node.stage, p)]
+
+    def _configs(self, node: Node, pu: str) -> List[int]:
+        if node.kind == "io":
+            return [max(node.workload, 1)]
+        if not self.cfg.enable_partition:
+            return [max(node.workload, 1)]
+        return shape_aware_configs(self.perf, node, pu,
+                                   token_groups=(self.cfg.token_group,
+                                                 self.cfg.token_group * 2,
+                                                 self.cfg.token_group * 4))
+
+    def _take_substage(self, dag: DynamicDAG, node: Node, n: int) -> Node:
+        """Dispatch an n-sized bite of ``node``; leave the remainder as a
+        ready sibling (batchable: parallel; streaming: sequential chain).
+        Partitioning is recomputed on the remaining workload at the next
+        dispatch (paper §4.2)."""
+        L = node.workload
+        if not self.cfg.enable_partition or n >= L or node.kind in (
+                "io", "search", "stream_prefill"):
+            return node
+        rest = Node(id=dag.fresh_id(f"{node.id}.r"), stage=node.stage,
+                    kind=node.kind, workload=L - n,
+                    deps=set(node.deps), template=node.template,
+                    group=node.group or node.id, payload=dict(node.payload))
+        node.workload = n
+        node.group = node.group or node.id
+        succ = list(dag.successors(node.id))
+        if node.kind == "stream_decode":
+            # sequential: remainder continues the stream; downstream triggers
+            # and expansion move to the final piece
+            rest.deps = {node.id}
+            rest.expander, node.expander = node.expander, None
+            rest.payload["on_progress"] = node.payload.get("on_progress")
+        dag.add(rest)
+        if node.kind == "stream_decode":
+            for s in succ:
+                s.deps.discard(node.id)
+                s.deps.add(rest.id)
+                dag._succ[node.id].discard(s.id)
+                dag._succ[rest.id].add(s.id)
+                dag._refresh_status(s)
+        else:
+            for s in succ:
+                dag.add_edge(rest.id, s.id)
+        return node
+
+
+# ---------------------------------------------------------------------------
+# baseline strategy factories (paper §6.1)
+# ---------------------------------------------------------------------------
+
+def strategy_config(name: str, stages: Dict[str, str]) -> SchedulerConfig:
+    """stages: stage-name -> role ('embed'|'rerank'|'search_llm'|'chat'|
+    'search'|'io'...) used to build the Ayo-like manual map."""
+    def all_to(pu: str) -> Dict[str, str]:
+        # FAISS-style vector search stays on CPU in every baseline (§6.1)
+        return {s: ("cpu" if r == "search" else pu)
+                for s, r in stages.items()}
+
+    if name == "llamacpp_gpu":
+        return SchedulerConfig(enable_partition=False,
+                               enable_criticality=False,
+                               enable_concurrency=False,
+                               static_map=all_to("gpu"))
+    if name == "powerserve_npu":
+        return SchedulerConfig(enable_partition=False,
+                               enable_criticality=False,
+                               enable_concurrency=False,
+                               static_map=all_to("npu"))
+    if name == "ayo_like":
+        m = {}
+        for s, role in stages.items():
+            m[s] = {"embed": "npu", "rerank": "npu", "search": "cpu",
+                    "search_llm": "npu", "chat": "gpu", "refine": "gpu",
+                    "rewrite": "npu", "io": "io"}.get(role, "gpu")
+        return SchedulerConfig(enable_partition=False,
+                               enable_criticality=False,
+                               enable_concurrency=False, static_map=m)
+    if name == "hero":
+        return SchedulerConfig()
+    raise KeyError(name)

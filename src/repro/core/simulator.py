@@ -1,0 +1,202 @@
+"""Event-driven SoC simulator — the execution substrate for validation.
+
+Plays the role of the phones in paper §6: executes a (dynamic) RAG DAG
+against the *ground-truth* hardware model, with time-varying bandwidth
+contention — node progress rates are rescaled by 1/φ(B(t)) whenever the
+active set changes, so the realized latency is p⁰·φ̄ exactly as in Eq. 2.
+
+The scheduler under test only sees the fitted LinearPerfModel; modelling
+error is therefore part of the experiment, as on real hardware.
+
+Fault-tolerance hooks: ``straggler_prob``/``fail_prob`` perturb node
+execution; the scheduler's speculative re-dispatch (straggler_factor) and
+retry close the loop — exercised by tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dag import DynamicDAG, Node
+from repro.core.perf_model import Config, GroundTruthPerf
+from repro.core.scheduler import Dispatch, HeroScheduler
+
+
+@dataclass
+class ActiveTask:
+    node: Node
+    pu: str
+    batch: int
+    work_left: float          # seconds of uncontended work remaining
+    bandwidth: float          # ground-truth demand b_v(c)
+    rate: float = 1.0         # 1/φ(B(t)) — updated on every event
+    dispatched_at: float = 0.0
+    predicted: float = 0.0    # scheduler's ETA (straggler detection)
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    timeline: List[Tuple[float, str, str]]         # (t, event, node)
+    pu_busy: Dict[str, float]
+    dispatches: int = 0
+    redispatches: int = 0
+    failures: int = 0
+
+    def utilization(self, pu: str) -> float:
+        return self.pu_busy.get(pu, 0.0) / max(self.makespan, 1e-9)
+
+
+class Simulator:
+    def __init__(self, gt: GroundTruthPerf, scheduler: HeroScheduler,
+                 straggler_prob: float = 0.0, straggler_slow: float = 4.0,
+                 fail_prob: float = 0.0, seed: int = 0):
+        self.gt = gt
+        self.sched = scheduler
+        self.rng = np.random.default_rng(seed)
+        self.straggler_prob = straggler_prob
+        self.straggler_slow = straggler_slow
+        self.fail_prob = fail_prob
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, dag: DynamicDAG, max_time: float = 3600.0) -> SimResult:
+        t = 0.0
+        active: Dict[str, ActiveTask] = {}       # node id -> task
+        pu_free: Dict[str, bool] = {p: True for p in self.sched.pus}
+        pu_free.setdefault("io", True)
+        busy_acc: Dict[str, float] = {p: 0.0 for p in pu_free}
+        timeline: List[Tuple[float, str, str]] = []
+        result = SimResult(0.0, timeline, busy_acc)
+
+        def B_total() -> float:
+            return sum(a.bandwidth for a in active.values())
+
+        def refresh_rates():
+            B = B_total()
+            for a in active.values():
+                stage = self.gt.stages.get(a.node.stage)
+                phi = self.gt.phi(stage, B) if stage is not None else 1.0
+                a.rate = 1.0 / phi
+
+        def busy_until(now: float) -> Dict[str, float]:
+            # scheduler-visible queue estimates (its own predictions)
+            return {a.pu: a.dispatched_at + a.predicted
+                    for a in active.values()}
+
+        def dispatch(now: float):
+            idle = [p for p, f in pu_free.items() if f]
+            if not idle:
+                return
+            decisions = self.sched.dispatch_pass(dag, now, idle, B_total(),
+                                                 busy_until(now))
+            for d in decisions:
+                self._start(d, now, active, pu_free, timeline)
+                result.dispatches += 1
+            if decisions:
+                refresh_rates()
+
+        dispatch(t)
+        guard = 0
+        while dag.unfinished() and t < max_time:
+            guard += 1
+            if guard > 200_000:
+                raise RuntimeError("simulator livelock")
+            if not active:
+                # nothing running but work remains: deadlock unless new
+                # dispatch succeeds (e.g. after elastic PU change)
+                decisions = self.sched.dispatch_pass(
+                    dag, t, [p for p, f in pu_free.items() if f], 0.0)
+                if not decisions:
+                    raise RuntimeError(
+                        f"deadlock at t={t:.3f}: "
+                        f"{[n.id for n in dag.unfinished()][:6]}")
+                for d in decisions:
+                    self._start(d, t, active, pu_free, timeline)
+                    result.dispatches += 1
+                refresh_rates()
+                continue
+            # next completion event under current rates
+            nid, task = min(active.items(),
+                            key=lambda kv: kv[1].work_left / kv[1].rate)
+            dt = task.work_left / task.rate
+            # straggler detection across ALL active tasks: re-dispatch any
+            # task whose φ-adjusted ETA is exceeded (capped per node so
+            # mispredictions cannot loop)
+            spec_nid, dt_spec = None, math.inf
+            for anid, a in active.items():
+                if a.node.payload.get("redispatches", 0) >= 4:
+                    continue
+                phi_now = 1.0 / max(a.rate, 1e-6)
+                deadline = (a.predicted * phi_now
+                            * self.sched.cfg.straggler_factor + 1e-3)
+                remaining_to_deadline = deadline - (t - a.dispatched_at)
+                will_complete_in = a.work_left / max(a.rate, 1e-12)
+                if will_complete_in <= max(remaining_to_deadline, 0.0):
+                    continue               # finishes before its deadline
+                cand = max(remaining_to_deadline, 0.0)
+                if cand < dt_spec:
+                    spec_nid, dt_spec = anid, cand
+            step = min(dt, dt_spec)
+            # advance time
+            for a in active.values():
+                a.work_left -= step * a.rate
+                busy_acc[a.pu] = busy_acc.get(a.pu, 0.0) + step
+            t += step
+            if dt_spec < dt:
+                # speculative re-dispatch: cancel and retry elsewhere
+                self._cancel(spec_nid, active, pu_free, timeline, t)
+                result.redispatches += 1
+                dispatch(t)
+                continue
+            # completion
+            done = active.pop(nid)
+            pu_free[done.pu] = True
+            timeline.append((t, "done", nid))
+            prog = done.node.payload.get("on_progress")
+            dag.mark_done(nid, t)
+            if prog is not None and done.node.kind == "stream_decode":
+                prog(dag, done.node, done.node.workload)
+            refresh_rates()
+            dispatch(t)
+        result.makespan = dag.makespan()
+        return result
+
+    # -- internals -----------------------------------------------------------
+    def _start(self, d: Dispatch, now: float, active, pu_free, timeline):
+        stage = self.gt.stages[d.node.stage]
+        pu = self.gt.soc.pu(d.pu) if d.pu != "io" else None
+        c = Config(d.pu, d.batch)
+        if d.node.kind == "io":
+            work, bw = 0.35, 0.0
+        else:
+            passes = -(-max(d.node.workload, 1) // max(d.batch, 1))
+            work = passes * self.gt.p0(stage, pu, c)
+            bw = self.gt.bandwidth(stage, pu, c)
+        # fault injection
+        if self.rng.random() < self.straggler_prob:
+            work *= self.straggler_slow
+        failed = self.rng.random() < self.fail_prob
+        if failed:
+            work *= 1e6  # never completes; straggler detection reaps it
+        active[d.node.id] = ActiveTask(
+            node=d.node, pu=d.pu, batch=d.batch, work_left=work,
+            bandwidth=bw, dispatched_at=now,
+            predicted=d.predicted_p0 * -(-max(d.node.workload, 1)
+                                         // max(d.batch, 1)))
+        if d.pu != "io":              # io = network, unbounded concurrency
+            pu_free[d.pu] = False
+        timeline.append((now, "start", d.node.id))
+
+    def _cancel(self, nid: str, active, pu_free, timeline, t):
+        task = active.pop(nid)
+        if task.pu != "io":
+            pu_free[task.pu] = True
+        n = task.node
+        n.status = "ready"   # back to the pool; scheduler will remap
+        n.start, n.config = -1.0, None
+        n.payload["redispatches"] = n.payload.get("redispatches", 0) + 1
+        timeline.append((t, "redispatch", nid))

@@ -1,0 +1,99 @@
+"""GQA flash-decode — Pallas TPU kernel for single-token serving steps.
+
+One new query token per sequence attends to a long KV cache.  All ``g``
+query heads of a kv-group are processed together so the score matmul is
+(g × e × bk) — MXU-shaped even though there is a single token.  The valid
+cache length is a scalar-prefetch operand (the kernel masks the tail), so
+one compiled program serves any fill level — exactly the shape-bucketing
+HeRo's perf model assumes for decode stages.
+
+Grid: (batch, kv_heads, kv_blocks); accumulator scratch carries the online
+softmax across kv blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, bk: int, nk: int):
+    ib, ik = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (g, e)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, e)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid_len = len_ref[ib]
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p.astype(jnp.float32), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, block_k: int = 512,
+                     scale=None, interpret: bool = False) -> jax.Array:
+    """q (b, h, e) one token per sequence; k/v_cache (b, S, n, e);
+    lengths (b,) valid cache lengths.  Returns (b, h, e)."""
+    b, h, e = q.shape
+    S, n = k_cache.shape[1], k_cache.shape[2]
+    g = h // n
+    scale = scale if scale is not None else e ** -0.5
+    bk = min(block_k, S)
+    nk = pl.cdiv(S, bk)
+
+    qr = q.reshape(b, n, g, e)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * n, S, e)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * n, S, e)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, e), lambda ib, ih, ik, _: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, bk, e), lambda ib, ih, ik, _: (ib * n + ih, ik, 0)),
+            pl.BlockSpec((1, bk, e), lambda ib, ih, ik, _: (ib * n + ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, e), lambda ib, ih, ik, _: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, e), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n, g, e), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(b, h, e)

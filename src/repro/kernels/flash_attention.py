@@ -1,0 +1,105 @@
+"""Flash attention (GQA, causal/full) — Pallas TPU kernel.
+
+Online-softmax flash attention for prefill / training.  The grid is
+(batch*q_heads, q_blocks, kv_blocks); the kv dimension is innermost so the
+f32 accumulator, row-max and row-sum scratch live in VMEM across kv
+iterations (TPU grids execute sequentially).
+
+VMEM working set per step (defaults bq=bk=256, e<=256):
+  q (256, e) + k (256, e) + v (256, e) + acc f32 (256, e) + s (256, 256) f32
+  ≈ 1.3 MB at e=128 — comfortably inside the ~16 MB VMEM budget, with MXU
+  dims (256×e×256) aligned to the 128×128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, e)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, e)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        iq = pl.program_id(1)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, scale: Optional[float] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q (b, sq, h, e); k/v (b, sk, n, e) with h % n == 0.  Returns
+    (b, sq, h, e)."""
+    b, sq, h, e = q.shape
+    sk, n = k.shape[1], k.shape[2]
+    group = h // n
+    scale = scale if scale is not None else e ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = pl.cdiv(sq, bq), pl.cdiv(sk, bk)
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, e)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * n, sk, e)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * n, sk, e)
+
+    def kv_index(ibh, iq, ik):
+        return (ibh // h) * n + (ibh % h) // group, ik, 0
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, e), lambda ibh, iq, ik: (ibh, iq, 0)),
+            pl.BlockSpec((1, bk, e), kv_index),
+            pl.BlockSpec((1, bk, e), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, e), lambda ibh, iq, ik: (ibh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, e), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, e), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # running sum
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, e).transpose(0, 2, 1, 3)

@@ -1,0 +1,76 @@
+"""Fused vector-search scoring + top-k — Pallas TPU kernel.
+
+The vector-DB retrieval stage (FAISS in the paper) reduces to a
+(queries × d) · (corpus × d)ᵀ matmul followed by per-query top-k.  Fusing
+the two means corpus blocks stream HBM→VMEM once; the running top-k
+(values + indices) lives in VMEM scratch across corpus blocks, merged with
+each block's scores via a single sort of (k + block) candidates.
+
+Grid (q_blocks, corpus_blocks), corpus innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(q_ref, c_ref, val_ref, idx_ref, *, k: int, bn: int,
+                 nn: int, n_total: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, NEG_INF)
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)                  # (bq, d)
+    c = c_ref[...].astype(jnp.float32)                  # (bn, d)
+    s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bn)
+    pos = ic * bn + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < n_total, s, NEG_INF)            # mask corpus padding
+
+    cur_v = val_ref[...]                                # (bq, k)
+    cur_i = idx_ref[...]
+    cand_v = jnp.concatenate([cur_v, s], axis=1)        # (bq, k + bn)
+    cand_i = jnp.concatenate([cur_i, pos], axis=1)
+    new_v, sel = jax.lax.top_k(cand_v, k)
+    new_i = jnp.take_along_axis(cand_i, sel, axis=1)
+    val_ref[...] = new_v
+    idx_ref[...] = new_i
+
+
+def topk_retrieval(queries: jax.Array, corpus: jax.Array, k: int, *,
+                   block_q: int = 128, block_n: int = 1024,
+                   interpret: bool = False):
+    """queries (nq, d), corpus (N, d) -> (scores (nq, k), ids (nq, k)),
+    inner-product metric (callers pre-normalize for cosine)."""
+    nq, d = queries.shape
+    N = corpus.shape[0]
+    bq, bn = min(block_q, nq), min(block_n, N)
+    nqb, nnb = pl.cdiv(nq, bq), pl.cdiv(N, bn)
+
+    vals, idxs = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, bn=bn, nn=nnb, n_total=N),
+        grid=(nqb, nnb),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda iq, ic: (iq, 0)),
+            pl.BlockSpec((bn, d), lambda iq, ic: (ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda iq, ic: (iq, 0)),
+            pl.BlockSpec((bq, k), lambda iq, ic: (iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, corpus)
+    return vals, idxs

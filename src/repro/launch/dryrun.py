@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, record memory_analysis / cost_analysis /
+collective bytes, and emit the roofline terms.
+
+This is how the distribution config is proven coherent without hardware:
+a sharding mismatch, compile-time OOM, or unsupported collective fails the
+cell.  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun.jsonl
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPES_BY_NAME, get_config, list_archs, shape_applicable)
+from repro.launch.hlo_cost import analyze as hlo_analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model, input_specs, make_step_fn  # noqa: E402
+from repro.models.sharding import (  # noqa: E402
+    input_shardings, param_shardings, set_activation_mesh)
+from repro.training.optimizer import AdamWConfig  # noqa: E402
+from repro.training.train_loop import TrainConfig, make_train_step  # noqa: E402
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s per link (~3 links usable per chip)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (optimized,
+    partitioned) HLO.  cost_analysis() does not expose these."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        opm = re.match(r"(?:\(|tuple\()?.*?\s*(" + "|".join(_COLLECTIVES)
+                       + r")(?:-start|-done)?\(", rhs)
+        if opm is None:
+            continue
+        op = opm.group(1)
+        if f" {op}(" not in rhs and not rhs.startswith(op) and \
+                f" {op}-start(" not in rhs:
+            # op name must be the actual instruction, not operand text
+            pass
+        # shapes before the op name = result shapes
+        head = rhs.split(op)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            numel = 1
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+            nbytes += numel * _DTYPE_BYTES[dt]
+        if "-done(" in rhs:
+            continue                      # avoid double count of async pairs
+        out[op] += nbytes
+    return out
+
+
+def _train_cfg(cfg, grad_accum: int = 1) -> TrainConfig:
+    big = cfg.param_count() > 50e9
+    return TrainConfig(optimizer=AdamWConfig(
+        state_dtype="bfloat16" if big else "float32"),
+        grad_accum=grad_accum)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               donate: bool = True, overrides: Optional[Dict] = None):
+    """Returns (lowered, meta) for one dry-run cell.  ``overrides`` are
+    dataclasses.replace fields on the ModelConfig (perf iterations)."""
+    import dataclasses
+    overrides = dict(overrides or {})
+    grad_accum = int(overrides.pop("grad_accum", 1))
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_mesh(mesh)   # model code pins activation layouts
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    in_sh = input_shardings(cfg, shape, mesh, specs)
+    p_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_sh = param_shardings(p_shapes, mesh)
+
+    if shape.kind == "train":
+        tcfg = _train_cfg(cfg, grad_accum)
+        init_fn, step = make_train_step(cfg, tcfg)
+        _, opt_shapes = jax.eval_shape(init_fn, jax.random.key(0))
+        opt_sh = param_shardings(opt_shapes, mesh)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, opt_sh, in_sh["batch"]),
+            donate_argnums=(0, 1) if donate else (),
+        ).lower(p_shapes, opt_shapes, specs["batch"])
+    elif shape.kind == "prefill":
+        step = make_step_fn(cfg, shape)
+        lowered = jax.jit(
+            step, in_shardings=(p_sh, in_sh["batch"]),
+        ).lower(p_shapes, specs["batch"])
+    else:  # decode
+        step = make_step_fn(cfg, shape)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, in_sh["tokens"], in_sh["cache"]),
+            donate_argnums=(2,) if donate else (),
+        ).lower(p_shapes, specs["tokens"], specs["cache"])
+    return lowered, {"mesh": "2x16x16" if multi_pod else "16x16",
+                     "devices": 512 if multi_pod else 256}
+
+
+def roofline(cost: Dict[str, Any], coll: Dict[str, float], chips: int,
+             cfg, shape) -> Dict[str, float]:
+    """Three roofline terms (seconds).  cost_analysis on the partitioned
+    SPMD module reports PER-DEVICE flops/bytes; collective bytes parsed
+    from HLO are also per-device program values."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(sum(coll.values()))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / (3 * ICI_BW)       # ~3 usable links/chip on v5e
+    n = (cfg.active_param_count() if cfg.moe.enabled else cfg.param_count())
+    toks = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                 (shape.seq_len if shape.kind == "prefill"
+                                  else 1))
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n * toks
+    hlo_flops_global = flops_dev * chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_frac": (model_flops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "bottleneck": max(
+            [("compute", t_compute), ("memory", t_memory),
+             ("collective", t_coll)], key=lambda kv: kv[1])[0],
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True,
+             overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   overrides=overrides)
+        if lowered is None:
+            rec.update(status="skipped", reason=meta["skipped"])
+            return rec
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        # HLO-walking cost model: multiplies scan bodies by trip count
+        # (XLA's cost_analysis counts called computations once) — see
+        # launch/hlo_cost.py.  xla_* kept for cross-checking.
+        xla_cost = compiled.cost_analysis()
+        hc = hlo_analyze(compiled.as_text())
+        cost = {"flops": hc["flops"], "bytes accessed": hc["bytes"],
+                "xla_flops": float(xla_cost.get("flops", 0.0))}
+        coll = hc["collectives"]
+        chips = meta["devices"]
+        import dataclasses as _dc
+        cfg = get_config(arch)
+        model_over = {k: v for k, v in (overrides or {}).items()
+                      if k != "grad_accum"}
+        if model_over:
+            cfg = _dc.replace(cfg, **model_over)
+        shape = SHAPES_BY_NAME[shape_name]
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0),
+            },
+            collectives=coll,
+            roofline=roofline(cost, coll, chips, cfg, shape),
+        )
+        hbm = rec["memory"]["peak_bytes"]
+        rec["fits_16gb_hbm"] = bool(hbm < 16e9)
+    except Exception as e:  # a failing cell is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}")
+    if verbose:
+        print(json.dumps(rec)[:400])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or args.shape is None)
+              else [args.shape])
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_skip = n_err = 0
+    for a, s, mp in cells:
+        key = (a, s, "2x16x16" if mp else "16x16")
+        if key in done:
+            continue
+        rec = run_cell(a, s, multi_pod=mp)
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skipped"
+        n_err += rec["status"] == "error"
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+            out_f.flush()
+    print(f"dry-run complete: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if out_f:
+        out_f.close()
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

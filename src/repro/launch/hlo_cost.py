@@ -1,0 +1,312 @@
+"""Recursive HLO cost model for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts each called computation ONCE —
+a ``lax.scan`` over 88 layers reports 1/88th of the real FLOPs, and the
+FSDP all-gathers inside the layer loop vanish from any flat accounting.
+This walker parses the optimized (partitioned) HLO text and:
+
+- multiplies ``while`` bodies by their trip count (read from the loop
+  condition's comparison constant),
+- descends into fusions / calls / conditionals,
+- counts dot FLOPs from operand shapes (symbol table) + contracting dims,
+- counts HBM bytes at fusion boundaries (operands + results of top-level
+  instructions — XLA's own bytes-accessed convention),
+- attributes collective bytes (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) by result size, including inside loops.
+
+Everything is per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_MATH_OPS = {"add", "multiply", "subtract", "divide", "exponential", "tanh",
+             "rsqrt", "sqrt", "log", "maximum", "minimum", "compare",
+             "select", "convert", "negate", "power", "exponential-minus-one",
+             "logistic", "cosine", "sine"}
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _shape_numel_bytes(shapes: List[Tuple[str, str]]) -> Tuple[int, int]:
+    numel = nbytes = 0
+    for dt, dims in shapes:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    line: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+    params: List[str] = field(default_factory=list)
+
+
+_HEADER = re.compile(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPTOK = re.compile(r"(?<![\w\-])([a-z][a-z0-9\-]*)\(")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            if raw.rstrip().endswith("{"):
+                m = _HEADER.match(raw)
+                if m:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+                    if raw.startswith("ENTRY"):
+                        entry = cur.name
+                    # parameters from the signature (order matters: they
+                    # map positionally to fusion operands)
+                    for pm in re.finditer(
+                            r"([\w.\-]+):\s*(\([^)]*\)|\w+\[[0-9,]*\])",
+                            m.group(2)):
+                        cur.symbols[pm.group(1)] = _SHAPE.findall(pm.group(2))
+                        cur.params.append(pm.group(1))
+                else:
+                    cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR.match(raw)
+        if im is None:
+            continue
+        name, rhs = im.groups()
+        om = _OPTOK.search(rhs)
+        if om is None:
+            continue
+        op = om.group(1)
+        head = rhs[: om.start()]
+        res = _SHAPE.findall(head)
+        cur.symbols[name] = res
+        # operand names: %-refs inside the first balanced paren group
+        depth, start, end = 0, om.end() - 1, len(rhs)
+        for i in range(start, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opnames = re.findall(r"%([\w.\-]+)", rhs[start:end])
+        cur.instrs.append(Instr(name, op, rhs, res, opnames))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()          # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[name]
+        total = Cost()
+        for ins in comp.instrs:
+            total.add(self.instr_cost(comp, ins))
+        self._memo[name] = total
+        return total
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr,
+                      fused: Computation) -> float:
+        """Boundary bytes of a fusion with slice-aware aliasing."""
+        # pass-through resolution: DUS/DS often address a bitcast/copy of
+        # the parameter, not the parameter itself
+        passthru: Dict[str, str] = {}
+        for fins in fused.instrs:
+            if fins.op in ("bitcast", "copy", "reshape", "transpose",
+                           "convert") and \
+                    len(fins.operand_names) == 1:
+                passthru[fins.name] = fins.operand_names[0]
+
+        def root(n: str) -> str:
+            seen = set()
+            while n in passthru and n not in seen:
+                seen.add(n)
+                n = passthru[n]
+            return n
+
+        sliced: Dict[str, int] = {}     # fused param -> slice bytes read
+        dus_targets: Dict[str, int] = {}  # fused param -> update bytes
+        for fins in fused.instrs:
+            if fins.op == "dynamic-slice" and fins.operand_names:
+                tgt = root(fins.operand_names[0])
+                sb = _shape_numel_bytes(fins.result_shapes)[1]
+                if tgt in fused.symbols:
+                    sliced[tgt] = sliced.get(tgt, 0) + sb
+            if fins.op == "dynamic-update-slice" and \
+                    len(fins.operand_names) >= 2:
+                tgt = root(fins.operand_names[0])
+                upd = fins.operand_names[1]
+                dus_targets[tgt] = dus_targets.get(tgt, 0) + \
+                    _shape_bytes_of(fused.symbols, upd)
+        total = 0.0
+        for i, opname in enumerate(ins.operand_names):
+            opb = _shape_bytes_of(comp.symbols, opname)
+            pname = fused.params[i] if i < len(fused.params) else None
+            if pname in dus_targets:
+                opb = 0                     # aliased in-place target
+            elif pname in sliced:
+                opb = min(opb, sliced[pname])
+            total += opb
+        res_bytes = _shape_numel_bytes(ins.result_shapes)[1]
+        if dus_targets:
+            # in-place update: only the written slices count
+            res_bytes = min(res_bytes, sum(dus_targets.values()))
+        return total + res_bytes
+
+    def _operand_shapes(self, comp: Computation, ins: Instr):
+        out = []
+        for n in ins.operand_names:
+            out.extend(comp.symbols.get(n, []))
+        return out
+
+    def instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.op
+        if op in _FREE_OPS:
+            return c
+        _, res_bytes = _shape_numel_bytes(ins.result_shapes)
+        opd_shapes = self._operand_shapes(comp, ins)
+        _, opd_bytes = _shape_numel_bytes(opd_shapes)
+
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+            trips = _trip_count(self.comps[cm.group(1)]) \
+                if cm and cm.group(1) in self.comps else 1
+            if bm and bm.group(1) in self.comps:
+                c.add(self.comp_cost(bm.group(1)), mult=trips)
+            if cm and cm.group(1) in self.comps:
+                c.add(self.comp_cost(cm.group(1)), mult=trips)
+            return c
+        if op == "conditional":
+            bm = _BRANCHES.search(ins.line)
+            if bm:
+                costs = [self.comp_cost(b.strip().lstrip("%"))
+                         for b in bm.group(1).split(",")]
+                if costs:
+                    c.add(max(costs, key=lambda x: x.flops + x.bytes))
+            return c
+
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES:
+            if op.endswith("-done"):
+                return c
+            c.coll[base] += res_bytes
+            c.bytes += res_bytes + opd_bytes
+            return c
+
+        # descend into called computations (fusions, reduces, sorts, ...)
+        # for FLOPs/collectives only: instructions inside a fusion do not
+        # touch HBM — bytes are counted once at the fusion boundary.
+        called = re.findall(r"(?:calls|to_apply|apply)=%?([\w.\-]+)",
+                            ins.line)
+        for sub in called:
+            if sub in self.comps:
+                sc = self.comp_cost(sub)
+                c.add(Cost(flops=sc.flops, bytes=0.0,
+                           coll=dict(sc.coll)))
+        if op == "fusion" and called and called[0] in self.comps:
+            # slice-aware boundary bytes: dynamic-slice reads and in-place
+            # dynamic-update-slice writes touch only the slice, not the
+            # full (possibly 100s-of-GB, scan-carried) operand
+            c.bytes += self._fusion_bytes(comp, ins, self.comps[called[0]])
+            return c
+
+        if op == "dot":
+            numel, _ = _shape_numel_bytes(ins.result_shapes)
+            contract = 1
+            cm = _CONTRACT.search(ins.line)
+            if cm and opd_shapes:
+                lhs_dims = opd_shapes[0][1].split(",")
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims) and lhs_dims[int(idx)]:
+                        contract *= int(lhs_dims[int(idx)])
+            c.flops += 2.0 * numel * contract
+        elif op == "convolution":
+            numel, _ = _shape_numel_bytes(ins.result_shapes)
+            kn = _shape_numel_bytes(opd_shapes[1:2])[0] if len(
+                opd_shapes) > 1 else 1
+            c.flops += 2.0 * numel * kn
+        elif op in _MATH_OPS:
+            numel, _ = _shape_numel_bytes(ins.result_shapes)
+            c.flops += numel
+        c.bytes += res_bytes + opd_bytes
+        return c
+
+
+def _shape_bytes_of(sym: Dict[str, List[Tuple[str, str]]], name: str) -> int:
+    return _shape_numel_bytes(sym.get(name, []))[1]
+
+
+def analyze(text: str) -> Dict[str, object]:
+    cm = HloCostModel(text)
+    c = cm.cost()
+    return {"flops": c.flops, "bytes": c.bytes, "collectives": dict(c.coll)}

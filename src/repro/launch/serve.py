@@ -1,0 +1,111 @@
+"""Serving launcher: HeRo-orchestrated agentic RAG over real executors.
+
+    PYTHONPATH=src python -m repro.launch.serve --workflow 2 --queries 3
+
+Runs the full executable pipeline — chunker, embedder, vector DB, reranker,
+rewriter/planner agents, chat generation — with reduced-config stage models
+on heterogeneous PU-group executors under the HeRo scheduler.  On a pod
+this is the deployment entry point: each PUExecutor wraps one mesh slice;
+here each wraps a CPU worker (same control plane, the point of the dry-run
+separation).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_family, reduced
+from repro.core import (GroundTruthPerf, HeroScheduler, LinearPerfModel,
+                        SchedulerConfig, snapdragon_8gen4)
+from repro.models import build_model
+from repro.rag import (STAGE_ROLES, HashTokenizer, VectorDB, build_stages,
+                       build_workflow, chunk_documents, default_means,
+                       make_template, sample_traces, synth_documents,
+                       synth_query)
+from repro.rag.agents import LMAgent
+from repro.rag.embedder import Embedder, Reranker
+from repro.serving import HeroRuntime, PUExecutor
+
+
+def build_pipeline(seed: int = 0):
+    fam = {k: reduced(v) for k, v in get_family("qwen3").items()}
+    key = jax.random.PRNGKey(seed)
+    models = {}
+    for role, cfg in fam.items():
+        params = build_model(cfg).init(jax.random.fold_in(key, hash(role) % 97))
+        models[role] = (cfg, params)
+    tok = HashTokenizer(fam["embed"].vocab_size)
+    embedder = Embedder(*models["embed"])
+    rerank = Reranker(*models["rerank"])
+    rewriter = LMAgent(*models["search"], max_len=256)
+    chat = LMAgent(*models["chat"], max_len=512)
+    return tok, embedder, rerank, rewriter, chat
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workflow", type=int, default=2, choices=[1, 2, 3])
+    ap.add_argument("--queries", type=int, default=2)
+    ap.add_argument("--dataset", default="finqabench")
+    args = ap.parse_args()
+
+    tok, embedder, reranker, rewriter, chat = build_pipeline()
+    stages = build_stages(get_family("qwen3"))
+    soc = snapdragon_8gen4()
+    perf = LinearPerfModel().fit(GroundTruthPerf(soc, stages))
+    traces = sample_traces(args.dataset, args.queries, seed=1)
+    means = default_means(traces)
+
+    docs = synth_documents(4, 400, seed=7)
+    chunks = chunk_documents(docs, tok)
+    db = VectorDB(dim=embedder.cfg.d_model)
+    query = synth_query(seed=3)
+    q_ids = tok.encode(query)
+
+    def fn_embed(node, batch):
+        if node.id.startswith("embed_chunks"):
+            take = chunks[: max(batch, 1)]
+            db.add(np.asarray(embedder.embed([c.token_ids for c in take])))
+            return len(take)
+        return np.asarray(embedder.embed([q_ids]))
+
+    def fn_vsearch(node, batch):
+        return db.search(np.asarray(embedder.embed([q_ids])), k=4)
+
+    def fn_rerank(node, batch):
+        scores = reranker.score(q_ids, [chunks[i % len(chunks)].token_ids
+                                        for i in range(min(batch, 8))])
+        return scores.tolist()
+
+    def fn_llm(node, batch):
+        agent = rewriter if node.stage.startswith(("rewrite", "plan")) \
+            else chat
+        if node.kind == "stream_prefill":
+            return "prefill"
+        return agent.generate(q_ids[:16], max_new=min(batch, 8)).token_ids
+
+    stage_fns = {s: fn_llm for s in stages}
+    stage_fns.update(embed=fn_embed, vsearch=fn_vsearch, rerank=fn_rerank,
+                     __io__=lambda n, b: time.sleep(0.05))
+
+    lat = []
+    for i, tr in enumerate(traces):
+        dag = build_workflow(args.workflow, tr, fine_grained=True)
+        sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
+                              SchedulerConfig(),
+                              template=make_template(args.workflow, means))
+        rt = HeroRuntime(sched, {p.name: PUExecutor(p.name)
+                                 for p in soc.pus}, stage_fns)
+        t0 = time.time()
+        rt.run(dag, timeout=600)
+        dt = time.time() - t0
+        lat.append(dt)
+        print(f"query {i}: {len(dag.nodes)} sub-stages in {dt:.2f}s wall")
+    print(f"mean wall latency: {np.mean(lat):.2f}s over {len(lat)} queries")
+
+
+if __name__ == "__main__":
+    main()

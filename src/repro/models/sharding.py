@@ -1,0 +1,260 @@
+"""Sharding rules: params / inputs / caches -> PartitionSpec pytrees.
+
+Scheme (GSPMD FSDP+TP, MaxText-style):
+- 2D weights shard (in=data, out=model) for "up" matmuls and
+  (in=model, out=data) for "down" matmuls — fully sharded params (the 671B
+  model does not fit a 256-chip pod under TP-only).
+- MoE experts shard E on `model` (expert parallelism) and d on `data`.
+- The `pod` axis is pure DP: params replicated across pods, batch sharded
+  over (pod, data).
+- Dims that do not divide the mesh axis are left unsharded (GSPMD could pad,
+  but even sharding keeps collectives regular), except vocab where uneven
+  padding is accepted.
+- long_500k (batch=1) shards decode KV caches on the *sequence* dim over
+  `data` (sequence parallelism); softmax reductions over the sharded axis
+  lower to collectives.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (logical-axis annotations)
+# ---------------------------------------------------------------------------
+# GSPMD propagation alone picks weight-stationary layouts for FSDP-sharded
+# params (batch ends up replicated — hundreds of GB of activations at
+# train_4k).  Launchers bind the mesh here; model code then pins activation
+# layouts with ``constrain``.  A None mesh (tests, CPU examples) is a no-op.
+
+_ACTIVATION_MESH: Optional[Mesh] = None
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def get_activation_mesh() -> Optional[Mesh]:
+    return _ACTIVATION_MESH
+
+
+def constrain(x, names: Tuple[Optional[str], ...]):
+    """names per dim: "batch" (pod+data), "data", "model", or None.
+    Dims that do not divide their axis stay unsharded."""
+    mesh = _ACTIVATION_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, names):
+        if name is None:
+            spec.append(None)
+        elif name == "batch":
+            axes = batch_axes(mesh)
+            total = int(np.prod([_axis_size(mesh, a) for a in axes]) or 1)
+            spec.append(axes if (axes and dim % total == 0) else None)
+        else:
+            spec.append(name if dim % _axis_size(mesh, name) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> Optional[str]:
+    return axis if n % max(_axis_size(mesh, axis), 1) == 0 else None
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_spec_dim(mesh: Mesh, b: int):
+    axes = batch_axes(mesh)
+    total = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
+    if axes and b % total == 0:
+        return axes
+    # fall back to data-only, then replicated
+    if "data" in mesh.shape and b % _axis_size(mesh, "data") == 0:
+        return ("data",)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+
+# leaf-name -> (rule ndim, spec builder).  Extra *leading* dims (stacked
+# layers / groups) are padded with None.
+def _param_rule(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                is_expert: bool = False):
+    D, M = "data", "model"
+
+    def spec(*dims):
+        return P(*dims)
+
+    if name in ("scale", "bias", "dt_bias", "gate_bias", "A_log", "D",
+                "xgate"):
+        return P(), 0
+    if name == "embed":
+        return spec(_div(shape[-2], mesh, M), _div(shape[-1], mesh, D)), 2
+    if name == "lm_head":
+        return spec(_div(shape[-2], mesh, D), _div(shape[-1], mesh, M)), 2
+    if name in ("wq", "wk", "wv") and len(shape) >= 3:   # attn (d, h, e)
+        return spec(_div(shape[-3], mesh, D), _div(shape[-2], mesh, M),
+                    None), 3
+    if name in ("wq", "wk", "wv"):                       # mLSTM (d, di)
+        return spec(_div(shape[-2], mesh, D), _div(shape[-1], mesh, M)), 2
+    if name == "wo":              # attention out-proj (h, e, d)
+        return spec(_div(shape[-3], mesh, M), None,
+                    _div(shape[-1], mesh, D)), 3
+    if name == "w_out":           # ssm/xlstm down-proj (di, d)
+        return spec(_div(shape[-2], mesh, M), _div(shape[-1], mesh, D)), 2
+    if name in ("bq", "bk", "bv"):
+        return spec(_div(shape[-2], mesh, M), None), 2
+    # routed-expert weights are identified by PATH (under 'moe', not
+    # 'shared') — a stacked dense MLP (L, d, ff) is also rank-3, and
+    # treating it as (E, d, ff) leaves ff unsharded (16x replication)
+    if name in ("w_up", "w_gate") and is_expert:        # experts (E, d, ff)
+        return spec(_div(shape[-3], mesh, M), _div(shape[-2], mesh, D),
+                    None), 3
+    if name == "w_down" and is_expert:                  # experts (E, ff, d)
+        return spec(_div(shape[-3], mesh, M), None,
+                    _div(shape[-1], mesh, D)), 3
+    if name in ("w_up", "w_gate"):
+        return spec(_div(shape[-2], mesh, D), _div(shape[-1], mesh, M)), 2
+    if name == "w_down":
+        return spec(_div(shape[-2], mesh, M), _div(shape[-1], mesh, D)), 2
+    if name == "router":
+        return P(), 0
+    if name in ("wq_a", "wkv_a"):
+        return spec(_div(shape[-2], mesh, D), None), 2
+    if name in ("wq_b", "wk_b", "wv_b"):
+        return spec(None, _div(shape[-2], mesh, M), None), 3
+    if name in ("wz", "wx", "W", "R", "proj"):
+        return spec(_div(shape[-2], mesh, D), _div(shape[-1], mesh, M)), 2
+    if name in ("wB", "wC", "wgate", "wdt"):
+        return spec(_div(shape[-2], mesh, D), _div(shape[-1], mesh, M)), 2
+    if name in ("conv", "conv_x", "conv_B", "conv_C"):
+        return spec(None, _div(shape[-1], mesh, M)), 2
+    return P(), 0
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    """params_shape: pytree of ShapeDtypeStructs (from jax.eval_shape)."""
+
+    def one(path, leaf):
+        name = None
+        keys = [str(e.key) for e in path
+                if isinstance(e, jax.tree_util.DictKey)]
+        name = keys[-1] if keys else ""
+        is_expert = "moe" in keys and "shared" not in keys
+        shape = leaf.shape
+        spec, rule_nd = _param_rule(name or "", shape, mesh, is_expert)
+        pad = len(shape) - len(spec)
+        if pad > 0:
+            spec = P(*([None] * pad), *spec)
+        elif pad < 0:  # rule wider than leaf (e.g. scalar xgate)
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# input / cache shardings
+# ---------------------------------------------------------------------------
+
+def _cache_rule(name: str, shape: Tuple[int, ...], mesh: Mesh, batch: int):
+    """Caches carry a leading stacked-layer dim: (L, B, S, ...).
+
+    KV caches dominate decode memory, so the sequence dim shards over
+    ``model`` (heads rarely divide the axis: GQA kv=8/20, MLA has no head
+    dim in its latent cache) — attention's softmax reduction over the
+    sharded S lowers to collectives.  batch=1 (long_500k) additionally
+    shards S over ``data`` (sequence parallelism)."""
+    bspec = _batch_spec_dim(mesh, batch)
+    seq_shard = bspec is None  # batch=1 -> sequence parallelism on the cache
+    M, D = "model", "data"
+
+    def seq_spec(s):
+        axes = []
+        if seq_shard:
+            axes.append(D)
+        axes.append(M)
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        return tuple(axes) if s % max(total, 1) == 0 else None
+
+    if name in ("k", "v"):        # (L, B, S, n, e)
+        return P(None, bspec, seq_spec(shape[-3]), None, None)
+    if name == "ckv":             # (L, B, S, r)
+        return P(None, bspec, seq_spec(shape[-2]), None)
+    if name == "krope":
+        return P(None, bspec, seq_spec(shape[-2]), None)
+    if name == "pos":             # (L, W) ring positions
+        return P(*([None] * len(shape)))
+    if name == "ssm":             # (L, B, H, P, N)
+        return P(None, bspec, _div(shape[-3], mesh, M), None, None)
+    if name in ("conv_x", "conv_B", "conv_C", "conv"):  # (L, B, K-1, c)
+        return P(None, bspec, None, _div(shape[-1], mesh, M))
+    if name == "C":               # mlstm (L, B, H, P, P)
+        return P(None, bspec, _div(shape[-3], mesh, M), None, None)
+    if name in ("n",):            # (L, B, H, P)
+        return P(None, bspec, _div(shape[-2], mesh, M), None)
+    if name in ("m",):            # (L, B, H)
+        return P(None, bspec, _div(shape[-1], mesh, M))
+    if name in ("c", "h"):        # slstm (L, B, d)
+        return P(None, bspec, None)
+    if name == "idx":
+        return P()
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    batch: int) -> Any:
+    def one(path, leaf):
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        spec = _cache_rule(name, leaf.shape, mesh, batch)
+        if len(spec) != len(leaf.shape):
+            # slstm m vs mlstm m etc. — fall back by rank
+            spec = P(*list(spec)[: len(leaf.shape)]) if len(spec) > len(
+                leaf.shape) else P(*list(spec) + [None] * (
+                    len(leaf.shape) - len(spec)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
+    def one(leaf):
+        b = leaf.shape[0]
+        spec = [_batch_spec_dim(mesh, b)] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Shardings matching models.input_specs(cfg, shape) structure."""
+    out: Dict[str, Any] = {}
+    if "batch" in specs:
+        out["batch"] = batch_shardings(specs["batch"], mesh)
+    if "tokens" in specs:
+        out["tokens"] = batch_shardings({"t": specs["tokens"]}, mesh)["t"]
+    if "cache" in specs:
+        out["cache"] = cache_shardings(specs["cache"], cfg, mesh,
+                                       shape.global_batch)
+    return out

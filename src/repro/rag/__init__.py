@@ -1,0 +1,9 @@
+from repro.rag.chunker import Chunk, chunk_documents  # noqa: F401
+from repro.rag.datasets import (  # noqa: F401
+    DATASETS, QueryTrace, sample_traces, synth_documents, synth_query)
+from repro.rag.embedder import Embedder, Reranker  # noqa: F401
+from repro.rag.stages import STAGE_ROLES, build_stages  # noqa: F401
+from repro.rag.tokenizer import HashTokenizer  # noqa: F401
+from repro.rag.vectordb import VectorDB  # noqa: F401
+from repro.rag.workflow import (  # noqa: F401
+    build_workflow, default_means, make_template)

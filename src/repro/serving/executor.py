@@ -1,0 +1,206 @@
+"""Heterogeneous executors + the real-time HeRo runtime.
+
+``PUExecutor`` is one processing-unit group: a worker thread with a task
+queue (on real hardware, one JAX mesh slice / device group; here, CPU
+workers).  ``HeroRuntime`` drives a live DynamicDAG through the HeRo
+scheduler against wall-clock time — the real-system counterpart of
+core/simulator.py — with the fault-tolerance loop the paper-scale
+deployment needs:
+
+- heartbeat + straggler mitigation: a task exceeding straggler_factor ×
+  the perf-model ETA is speculatively re-dispatched to another PU
+  (the slow copy is cancelled cooperatively);
+- retry with backoff on executor exceptions;
+- elastic membership: PUs may join/leave between dispatch passes
+  (scheduler.add_pu / remove_pu) — in-flight work on a lost PU is
+  re-queued, which is exactly how a lost pod slice is handled at scale.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.dag import DynamicDAG, Node
+from repro.core.scheduler import Dispatch, HeroScheduler
+
+StageFn = Callable[[Node, int], Any]   # (node, batch) -> result
+
+
+@dataclass
+class _Task:
+    node: Node
+    batch: int
+    fn: StageFn
+    started: float = 0.0
+    cancelled: bool = False
+    result: Any = None
+    error: Optional[str] = None
+    done_evt: threading.Event = field(default_factory=threading.Event)
+
+
+class PUExecutor:
+    def __init__(self, name: str):
+        self.name = name
+        self._q: "queue.Queue[_Task]" = queue.Queue()
+        self._alive = True
+        self._working = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, task: _Task):
+        self._q.put(task)
+
+    def busy(self) -> bool:
+        """True while the worker has queued or running work — including a
+        cancelled straggler it cannot preempt (work is non-preemptible;
+        the scheduler must route around it)."""
+        return self._working > 0 or not self._q.empty()
+
+    def shutdown(self):
+        self._alive = False
+        self._q.put(None)  # type: ignore[arg-type]
+
+    def _loop(self):
+        while self._alive:
+            task = self._q.get()
+            if task is None:
+                return
+            self._working += 1
+            task.started = time.monotonic()
+            if not task.cancelled:
+                try:
+                    task.result = task.fn(task.node, task.batch)
+                except Exception:                  # retry handled upstream
+                    task.error = traceback.format_exc()
+            self._working -= 1
+            task.done_evt.set()
+
+
+class HeroRuntime:
+    """Run one RAG DAG on real executors under the HeRo scheduler."""
+
+    def __init__(self, scheduler: HeroScheduler,
+                 executors: Dict[str, PUExecutor],
+                 stage_fns: Dict[str, StageFn],
+                 max_retries: int = 2):
+        self.sched = scheduler
+        self.executors = executors
+        self.stage_fns = stage_fns
+        self.max_retries = max_retries
+        self.results: Dict[str, Any] = {}
+        self.events: List[tuple] = []
+
+    def add_executor(self, name: str, ex: PUExecutor):
+        self.executors[name] = ex
+        self.sched.add_pu(name)
+
+    def remove_executor(self, name: str):
+        """Elastic scale-down / failure: drop the PU; in-flight work is
+        re-queued by the main loop when its heartbeat lapses."""
+        self.executors.pop(name, None)
+        self.sched.remove_pu(name)
+
+    def run(self, dag: DynamicDAG, poll: float = 0.002,
+            timeout: float = 300.0) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        inflight: Dict[str, tuple] = {}     # node id -> (_Task, Dispatch, retries)
+
+        def now() -> float:
+            return time.monotonic() - t0
+
+        def busy_until():
+            return {d.pu: d_task.started - t0 + d.predicted_p0
+                    for d_task, d, _ in inflight.values()}
+
+        def b_now() -> float:
+            return sum(d.bandwidth for _, d, _ in inflight.values())
+
+        def dispatch():
+            busy = {d.pu for _, d, _ in inflight.values()}
+            busy |= {name for name, ex in self.executors.items()
+                     if ex.busy()}
+            idle = [p for p in list(self.executors) + ["io"]
+                    if p not in busy]
+            for d in self.sched.dispatch_pass(dag, now(), idle, b_now(),
+                                              busy_until()):
+                self._launch(d, inflight, dag, retries=0)
+
+        dispatch()
+        while dag.unfinished():
+            if now() > timeout:
+                raise TimeoutError("HeroRuntime timed out")
+            if not inflight:
+                dispatch()
+                if not inflight and dag.unfinished():
+                    raise RuntimeError(
+                        f"deadlock: {[n.id for n in dag.unfinished()][:4]}")
+            progressed = False
+            for nid in list(inflight):
+                task, d, retries = inflight[nid]
+                if task.done_evt.is_set():
+                    del inflight[nid]
+                    progressed = True
+                    if task.cancelled:
+                        continue
+                    if task.error is not None:
+                        if retries < self.max_retries:
+                            self.events.append((now(), "retry", nid))
+                            self._launch(d, inflight, dag,
+                                         retries=retries + 1)
+                            continue
+                        raise RuntimeError(
+                            f"stage {nid} failed:\n{task.error}")
+                    self.results[nid] = task.result
+                    prog = d.node.payload.get("on_progress")
+                    dag.mark_done(nid, now())
+                    if prog is not None and d.node.kind == "stream_decode":
+                        prog(dag, d.node, d.node.workload)
+                    self.events.append((now(), "done", nid))
+                elif task.started and not task.cancelled:
+                    # straggler heartbeat (perf-model ETA as the prior, with
+                    # a jitter floor and a per-node speculation cap)
+                    eta = max(d.predicted_p0 *
+                              self.sched.cfg.straggler_factor, 0.05)
+                    can_spec = d.node.payload.get("redispatches", 0) < 4
+                    if (can_spec and d.pu in self.executors
+                            and time.monotonic() - task.started > eta):
+                        task.cancelled = True
+                        self.events.append((now(), "straggler", nid))
+                        d.node.status = "ready"
+                        d.node.start, d.node.config = -1.0, None
+                        d.node.payload["redispatches"] = \
+                            d.node.payload.get("redispatches", 0) + 1
+                        del inflight[nid]
+                        progressed = True
+                    elif d.pu not in self.executors:
+                        # PU left the fleet: re-queue
+                        task.cancelled = True
+                        d.node.status = "ready"
+                        d.node.start, d.node.config = -1.0, None
+                        del inflight[nid]
+                        progressed = True
+            if progressed:
+                dispatch()
+            else:
+                time.sleep(poll)
+        return self.results
+
+    def _launch(self, d: Dispatch, inflight, dag: DynamicDAG, retries: int):
+        fn = self.stage_fns.get(d.node.stage)
+        if d.pu == "io" or fn is None:
+            fn = self.stage_fns.get("__io__", lambda n, b: None)
+        task = _Task(d.node, d.batch, fn)
+        if d.node.status != "running":
+            dag.mark_running(d.node.id, 0.0, (d.pu, d.batch))
+        if d.pu == "io":
+            threading.Thread(target=lambda: (setattr(
+                task, "result", fn(d.node, d.batch)), task.done_evt.set()),
+                daemon=True).start()
+        else:
+            self.executors[d.pu].submit(task)
+        inflight[d.node.id] = (task, d, retries)
+        self.events.append((time.monotonic(), "start", d.node.id))

@@ -1,0 +1,6 @@
+from repro.training.grad_compression import (  # noqa: F401
+    compress_tree_psum, compressed_psum)
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm)
+from repro.training.train_loop import (  # noqa: F401
+    TrainConfig, make_train_step, train)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device — the 512-device override is
+# strictly dryrun.py-local (per the harness contract).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,215 @@
+"""HeRo core unit tests + hypothesis property tests on scheduler invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Config, DynamicDAG, GroundTruthPerf, HeroScheduler,
+                        LinearPerfModel, SchedulerConfig, Simulator,
+                        StageModel, snapdragon_8gen4, strategy_config)
+from repro.core.dag import Node
+from repro.core.partitioner import best_batch, shape_aware_configs
+
+
+@pytest.fixture(scope="module")
+def world():
+    soc = snapdragon_8gen4()
+    stages = {
+        "embed": StageModel("embed", int(6e8), 1024, "batchable",
+                            item_tokens=128),
+        "rerank": StageModel("rerank", int(6e8), 1024, "batchable",
+                             item_tokens=160),
+        "search": StageModel("search", 0, 1024, "search"),
+        "prefill": StageModel("prefill", int(4e9), 2560, "stream_prefill"),
+        "decode": StageModel("decode", int(4e9), 2560, "stream_decode"),
+    }
+    gt = GroundTruthPerf(soc, stages)
+    perf = LinearPerfModel().fit(gt)
+    return soc, stages, gt, perf
+
+
+# --- perf model -------------------------------------------------------------
+
+def test_regression_accuracy_on_and_off_grid(world):
+    soc, stages, gt, perf = world
+    for pu in soc.pus:
+        for sname, stage in stages.items():
+            if not gt.supported(stage, pu):
+                continue
+            for n in [1, 8, 11, 22, 64, 100, 256]:
+                true = gt.p0(stage, pu, Config(pu.name, n))
+                est = perf.p0(sname, pu.name, n)
+                assert est > 0
+                assert abs(est - true) / true < 0.8, (sname, pu.name, n)
+
+
+def test_phi_monotone(world):
+    soc, stages, gt, perf = world
+    b0 = soc.dram_bw
+    xs = np.linspace(0, 2 * b0, 30)
+    for sname in stages:
+        phis = [perf.phi(sname, x) for x in xs]
+        assert phis[0] >= 1.0 - 1e-6
+        assert all(b >= a - 1e-9 for a, b in zip(phis, phis[1:]))
+
+
+def test_affinity_embed_npu_generation_gpu(world):
+    """Fig. 2: encoder stages favour NPU; decode favours GPU."""
+    soc, stages, gt, perf = world
+    assert perf.p0("embed", "npu", 32) < perf.p0("embed", "gpu", 32)
+    assert perf.p0("embed", "npu", 32) < perf.p0("embed", "cpu", 32)
+    assert perf.p0("decode", "gpu", 16) < perf.p0("decode", "npu", 16)
+
+
+def test_eq3_batch_choice(world):
+    soc, stages, gt, perf = world
+    n, t = best_batch(perf, "embed", "npu", 100)
+    # Eq. 3 should beat the single monolithic pass
+    assert t <= perf.p0("embed", "npu", 100) + 1e-9
+    assert n <= 100
+
+
+# --- DAG / scheduler properties (hypothesis) --------------------------------
+
+@st.composite
+def dag_strategy(draw):
+    """Random layered DAGs over the stage catalog."""
+    n_layers = draw(st.integers(1, 4))
+    stages_pool = ["embed", "rerank", "prefill", "decode", "search"]
+    kinds = {"embed": "batchable", "rerank": "batchable",
+             "prefill": "stream_prefill", "decode": "stream_decode",
+             "search": "search"}
+    nodes = []
+    layers = []
+    for li in range(n_layers):
+        width = draw(st.integers(1, 3))
+        layer = []
+        for wi in range(width):
+            stage = draw(st.sampled_from(stages_pool))
+            wl = draw(st.integers(1, 64))
+            nid = f"n{li}_{wi}"
+            deps = []
+            if li > 0:
+                deps = draw(st.lists(st.sampled_from(layers[li - 1]),
+                                     max_size=len(layers[li - 1]),
+                                     unique=True))
+            nodes.append((nid, stage, kinds[stage], wl, deps))
+            layer.append(nid)
+        layers.append(layer)
+    return nodes
+
+
+def build_dag(spec):
+    dag = DynamicDAG()
+    for nid, stage, kind, wl, deps in spec:
+        dag.add(Node(nid, stage, kind, wl, deps=set(deps)))
+    return dag
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=dag_strategy(),
+       strat=st.sampled_from(["hero", "ayo_like", "powerserve_npu"]))
+def test_scheduler_invariants(spec, strat):
+    soc = snapdragon_8gen4()
+    stages = {
+        "embed": StageModel("embed", int(6e8), 1024, "batchable"),
+        "rerank": StageModel("rerank", int(6e8), 1024, "batchable"),
+        "search": StageModel("search", 0, 1024, "search"),
+        "prefill": StageModel("prefill", int(4e9), 2560, "stream_prefill"),
+        "decode": StageModel("decode", int(4e9), 2560, "stream_decode"),
+    }
+    gt = GroundTruthPerf(soc, stages)
+    perf = LinearPerfModel().fit(gt)
+    roles = {"embed": "embed", "rerank": "rerank", "search": "search",
+             "prefill": "chat", "decode": "chat"}
+    cfg = strategy_config(strat, roles)
+    dag = build_dag(spec)
+    total_workload = {n.id: n.workload for n in dag.nodes.values()}
+    sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw, cfg)
+    res = Simulator(gt, sched).run(dag, max_time=7200)
+
+    # 1. every node (and spawned sub-stage) completed
+    assert not dag.unfinished()
+    # 2. dependencies respected: finish(dep) <= start(node)
+    for n in dag.nodes.values():
+        for d in n.deps:
+            assert dag.nodes[d].finish <= n.start + 1e-9, (d, n.id)
+    # 3. no PU ran two sub-stages at once
+    by_pu = {}
+    for n in dag.nodes.values():
+        if n.config is None or n.config[0] == "io":
+            continue
+        by_pu.setdefault(n.config[0], []).append((n.start, n.finish))
+    for pu, spans in by_pu.items():
+        spans.sort()
+        for (s1, f1), (s2, f2) in zip(spans, spans[1:]):
+            assert f1 <= s2 + 1e-9, (pu, (s1, f1), (s2, f2))
+    # 4. workload conservation: sub-stage pieces of a group sum to parent
+    sums = {}
+    for n in dag.nodes.values():
+        key = n.group or n.id
+        sums[key] = sums.get(key, 0) + n.workload
+    for nid, wl in total_workload.items():
+        assert sums.get(nid, wl) == wl
+    # 5. makespan = max finish
+    assert res.makespan == pytest.approx(
+        max(n.finish for n in dag.nodes.values()))
+    # 6. static maps only use their pinned PUs
+    if cfg.static_map is not None:
+        for n in dag.nodes.values():
+            if n.config and n.config[0] != "io":
+                assert n.config[0] == cfg.static_map[n.stage]
+
+
+def test_deferral_avoids_slow_idle_pu(world):
+    """Queue-aware mapping: a critical stage queues for the fast busy PU
+    instead of grabbing the catastrophically slow idle one."""
+    soc, stages, gt, perf = world
+    dag = DynamicDAG()
+    dag.add(Node("e1", "embed", "batchable", 64))
+    dag.add(Node("e2", "embed", "batchable", 64))
+    sched = HeroScheduler(perf, ["cpu", "npu"], soc.dram_bw,
+                          SchedulerConfig())
+    res = Simulator(gt, sched).run(dag)
+    # both stages should run on the NPU (cpu embed is ~100x slower)
+    assert all(n.config[0] == "npu" for n in dag.nodes.values())
+
+
+def test_elastic_pu_membership(world):
+    soc, stages, gt, perf = world
+    sched = HeroScheduler(perf, ["cpu", "gpu"], soc.dram_bw,
+                          SchedulerConfig())
+    sched.add_pu("npu")
+    assert "npu" in sched.pus
+    sched.remove_pu("gpu")
+    dag = DynamicDAG()
+    dag.add(Node("e1", "embed", "batchable", 32))
+    res = Simulator(gt, sched).run(dag)
+    assert dag.nodes["e1"].config[0] in ("cpu", "npu")
+
+
+def test_straggler_redispatch(world):
+    soc, stages, gt, perf = world
+    dag = DynamicDAG()
+    dag.add(Node("e1", "embed", "batchable", 32))
+    sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
+                          SchedulerConfig(straggler_factor=2.0))
+    sim = Simulator(gt, sched, straggler_prob=1.0, straggler_slow=50.0,
+                    seed=1)
+    res = sim.run(dag)
+    assert not dag.unfinished()
+    assert res.redispatches >= 1
+
+
+def test_failure_recovery(world):
+    """A node that never completes is reaped and re-dispatched."""
+    soc, stages, gt, perf = world
+    dag = DynamicDAG()
+    dag.add(Node("e1", "embed", "batchable", 16))
+    dag.add(Node("e2", "rerank", "batchable", 8, deps={"e1"}))
+    sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
+                          SchedulerConfig(straggler_factor=2.0))
+    sim = Simulator(gt, sched, fail_prob=0.3, seed=3)
+    res = sim.run(dag)
+    assert not dag.unfinished()
