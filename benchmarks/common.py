@@ -1,58 +1,32 @@
-"""Shared harness for the paper-reproduction benchmarks."""
+"""Shared harness for the paper-reproduction benchmarks — a thin layer
+over the ``repro.api`` session facade."""
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
-from repro.configs import get_family
-from repro.core import (GroundTruthPerf, HeroScheduler, LinearPerfModel,
-                        SchedulerConfig, Simulator, snapdragon_8gen3,
-                        snapdragon_8gen4, strategy_config)
-from repro.rag import (STAGE_ROLES, build_stages, build_workflow,
-                       default_means, make_template, sample_traces)
+from repro.api import HeroSession
+from repro.api.session import SOCS, STRATEGIES, make_world  # noqa: F401
+from repro.rag import default_means, sample_traces
 
-SOCS = {"sd8gen3": snapdragon_8gen3, "sd8gen4": snapdragon_8gen4}
-STRATEGIES = ("llamacpp_gpu", "powerserve_npu", "ayo_like", "hero")
 DATASETS = ("finqabench", "truthfulqa", "hotpotqa", "2wikimqa")
-
-
-def make_world(soc_name: str, family: str):
-    soc = SOCS[soc_name]()
-    stages = build_stages(get_family(family))
-    gt = GroundTruthPerf(soc, stages)
-    perf = LinearPerfModel().fit(gt)
-    return soc, gt, perf
-
-
-def scheduler_for(strategy: str, perf, soc, wf: int, means,
-                  overrides: Optional[dict] = None) -> HeroScheduler:
-    if strategy == "hero":
-        cfg, tmpl = SchedulerConfig(), make_template(wf, means)
-    else:
-        cfg, tmpl = strategy_config(strategy, STAGE_ROLES), None
-    if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
-        if cfg.enable_criticality and tmpl is None:
-            tmpl = make_template(wf, means)
-    return HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw, cfg,
-                         template=tmpl), cfg
 
 
 def mean_latency(strategy: str, soc_name: str, family: str, wf: int,
                  dataset: str, n: int = 5, seed: int = 1,
                  overrides: Optional[dict] = None) -> float:
-    soc, gt, perf = make_world(soc_name, family)
+    """Mean single-query makespan over ``n`` sampled traces (the paper's
+    latency protocol): one isolated session run per trace."""
     traces = sample_traces(dataset, n, seed=seed)
-    means = default_means(traces)
-    lat = []
+    sess = HeroSession(world=soc_name, family=family, strategy=strategy,
+                       means=default_means(traces),
+                       cfg_overrides=overrides)
     for tr in traces:
-        sched, cfg = scheduler_for(strategy, perf, soc, wf, means, overrides)
-        dag = build_workflow(wf, tr, fine_grained=cfg.enable_partition)
-        lat.append(Simulator(gt, sched).run(dag).makespan)
-    return float(np.mean(lat))
+        sess.submit(tr, wf=wf)
+    results = sess.run(mode="isolated")
+    return float(np.mean([r.makespan for r in results]))
 
 
 def timeit_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -6,12 +6,30 @@ import sys
 import time
 
 
+def session_facade(csv=print):
+    """Facade smoke: the same session script on both backends (sim gives
+    modelled SoC seconds, live gives wall seconds over dry executors)."""
+    from repro.api import HeroSession
+    from repro.rag import sample_traces
+
+    trace = sample_traces("finqabench", 1, seed=2)[0]
+    csv("backend,strategy,makespan_s,dispatches")
+    for backend in ("sim", "live"):
+        for strategy in ("hero", "llamacpp_gpu"):
+            sess = HeroSession(world="sd8gen4", family="qwen3",
+                               strategy=strategy, backend=backend)
+            sess.submit(trace, wf=2)
+            [res] = sess.run(timeout=120)
+            csv(f"{backend},{strategy},{res.makespan:.3f},{res.dispatches}")
+
+
 def main() -> None:
     from benchmarks import (fig2_affinity, fig3_contention, fig5_qwen3,
                             fig6_bge, grid_search, kernels_bench,
                             multiquery, roofline, table3_ablation)
     quick = "--quick" in sys.argv
     sections = [
+        ("SessionFacade_sim_live (api)", session_facade, {}),
         ("Fig2_affinity_shape_sensitivity", fig2_affinity.run, {}),
         ("Fig3_contention_slowdown", fig3_contention.run, {}),
         ("Fig5_e2e_latency_qwen3", fig5_qwen3.run,

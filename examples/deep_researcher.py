@@ -1,27 +1,21 @@
-"""Deep Researcher (Workflow 3) with fault injection.
+"""Deep Researcher (Workflow 3) with fault injection, via `HeroSession`.
 
 The most complex paper workflow — search planner, web requests, per-branch
-refinement — scheduled by HeRo on the simulator, with stragglers and
-outright executor failures injected.  Demonstrates the fault-tolerance
-loop: speculative re-dispatch reaps the stragglers, retries recover the
-failures, and the makespan degrades gracefully instead of hanging.
+refinement — scheduled by HeRo on the simulator backend, with stragglers
+and outright executor failures injected through ``sim_opts``.
+Demonstrates the fault-tolerance loop: speculative re-dispatch reaps the
+stragglers, retries recover the failures, and the makespan degrades
+gracefully instead of hanging.
 
     PYTHONPATH=src python examples/deep_researcher.py
 """
 import numpy as np
 
-from repro.configs import get_family
-from repro.core import (GroundTruthPerf, HeroScheduler, LinearPerfModel,
-                        SchedulerConfig, Simulator, snapdragon_8gen4)
-from repro.rag import (build_stages, build_workflow, default_means,
-                       make_template, sample_traces)
+from repro.api import HeroSession
+from repro.rag import default_means, sample_traces
 
 
 def main():
-    soc = snapdragon_8gen4()
-    stages = build_stages(get_family("qwen3"))
-    gt = GroundTruthPerf(soc, stages)
-    perf = LinearPerfModel().fit(gt)
     traces = sample_traces("2wikimqa", 3, seed=7)
     means = default_means(traces)
 
@@ -37,12 +31,11 @@ def main():
     ]:
         lat, red = [], 0
         for i, tr in enumerate(traces):
-            dag = build_workflow(3, tr, fine_grained=True)
-            sched = HeroScheduler(perf, [p.name for p in soc.pus],
-                                  soc.dram_bw,
-                                  SchedulerConfig(straggler_factor=2.5),
-                                  template=make_template(3, means))
-            res = Simulator(gt, sched, seed=i, **kw).run(dag)
+            sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                               cfg_overrides={"straggler_factor": 2.5},
+                               sim_opts={"seed": i, **kw})
+            sess.submit(tr, wf=3)
+            [res] = sess.run()
             lat.append(res.makespan)
             red += res.redispatches
         print(f"{name:34s} {np.mean(lat):8.2f}s {red:10d}")
@@ -50,10 +43,10 @@ def main():
     print("\nelastic scale-down mid-fleet (NPU lost):")
     tr = traces[0]
     for pus in (["cpu", "gpu", "npu"], ["cpu", "gpu"]):
-        dag = build_workflow(3, tr, fine_grained=True)
-        sched = HeroScheduler(perf, pus, soc.dram_bw, SchedulerConfig(),
-                              template=make_template(3, means))
-        res = Simulator(gt, sched).run(dag)
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           pus=pus)
+        sess.submit(tr, wf=3)
+        [res] = sess.run()
         print(f"  PUs={pus}: {res.makespan:.2f}s")
 
 

@@ -1,31 +1,21 @@
-"""Quickstart: the HeRo scheduler in 60 lines.
+"""Quickstart: the HeRo scheduler through the `HeroSession` facade.
 
-Builds the paper's Workflow 2 (Advanced Document QA Bot) for one query,
-schedules it on a simulated Snapdragon 8 Elite with all four strategies,
-and prints the end-to-end latencies — the core result of the paper in one
-script.
+Runs the paper's Workflow 2 (Advanced Document QA Bot) for one query on a
+simulated Snapdragon 8 Elite with all four strategies and prints the
+end-to-end latencies — the core result of the paper in one script.  The
+session owns all the wiring (SoC spec, ground-truth profiling, perf-model
+fitting, scheduler, simulator); swap ``backend="live"`` to execute the
+same script on real worker threads.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs import get_family
-from repro.core import (GroundTruthPerf, HeroScheduler, LinearPerfModel,
-                        SchedulerConfig, Simulator, snapdragon_8gen4,
-                        strategy_config)
-from repro.rag import (STAGE_ROLES, build_stages, build_workflow,
-                       default_means, make_template, sample_traces)
+from repro.api import HeroSession
+from repro.rag import sample_traces
 
 
 def main():
-    # 1. hardware + stage models (Qwen3 RAG family, INT8)
-    soc = snapdragon_8gen4()
-    stages = build_stages(get_family("qwen3"))
-
-    # 2. offline profiling: ground truth -> fitted linear perf model (§5)
-    gt = GroundTruthPerf(soc, stages)
-    perf = LinearPerfModel().fit(gt)
-
-    # 3. one HotpotQA-like query through Workflow 2
     trace = sample_traces("hotpotqa", 1, seed=42)[0]
+    from repro.rag import default_means
     means = default_means(sample_traces("hotpotqa", 16, seed=0))
     print(f"query: {trace.n_chunks} chunks to index, "
           f"{trace.n_subqueries} sub-queries, "
@@ -33,17 +23,13 @@ def main():
 
     results = {}
     for strategy in ("llamacpp_gpu", "powerserve_npu", "ayo_like", "hero"):
-        if strategy == "hero":
-            cfg, tmpl = SchedulerConfig(), make_template(2, means)
-        else:
-            cfg, tmpl = strategy_config(strategy, STAGE_ROLES), None
-        dag = build_workflow(2, trace, fine_grained=cfg.enable_partition)
-        sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
-                              cfg, template=tmpl)
-        res = Simulator(gt, sched).run(dag)
+        sess = HeroSession(world="sd8gen4", family="qwen3",
+                           strategy=strategy, means=means)
+        sess.submit(trace, wf=2)
+        [res] = sess.run()
         results[strategy] = res.makespan
         util = ", ".join(f"{p.name}={res.utilization(p.name) * 100:.0f}%"
-                         for p in soc.pus)
+                         for p in sess.soc.pus)
         print(f"{strategy:16s} {res.makespan:6.2f}s   util: {util}")
 
     print(f"\nHeRo speedup vs GPU-only: "

@@ -1,0 +1,16 @@
+# HeRo session API — the one way to run HeRo (simulated or live).
+#
+#   from repro.api import HeroSession
+#   sess = HeroSession(world="sd8gen4", family="qwen3", strategy="hero")
+#   h = sess.submit(trace, wf=2)
+#   [result] = sess.run()
+#
+# Low-level building blocks (Simulator, HeroScheduler, HeroRuntime, ...)
+# stay importable from repro.core / repro.serving for the figure benchmarks.
+from repro.api.backends import (  # noqa: F401
+    Backend, BackendRun, LiveBackend, SimBackend)
+from repro.api.results import QueryResult, collect_results  # noqa: F401
+from repro.api.session import HeroSession, QueryHandle, make_world  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    BranchGroup, BranchStage, CollectorSpec, StageSpec, WorkflowSpec,
+    builtin_spec)

@@ -1,0 +1,152 @@
+"""Execution backends behind :class:`repro.api.session.HeroSession`.
+
+One :class:`Backend` protocol, two substrates:
+
+- :class:`SimBackend` — the event-driven SoC simulator
+  (``repro.core.simulator``), executing against the ground-truth hardware
+  model with bandwidth contention and optional fault injection;
+- :class:`LiveBackend` — the wall-clock runtime
+  (``repro.serving.executor``), driving real ``PUExecutor`` worker
+  threads through the same scheduler.
+
+The same session script runs against either via ``backend="sim"|"live"``.
+Both backends forward per-node lifecycle events to an observer callback,
+which is how the session implements per-query streaming callbacks
+(``on_token`` / ``on_stage_done``).
+
+Admission timers: a node with ``kind == "io"`` and ``payload["arrival"]``
+completes no earlier than that absolute (run-relative) time — the
+simulator charges it ``max(arrival - now, 0)`` seconds of work, the live
+backend sleeps the remaining wall-clock delay.  Gating a query's root
+stages on such a node is how continuous multi-query admission works on
+both substrates.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+from repro.core.dag import DynamicDAG, Node
+from repro.core.perf_model import GroundTruthPerf
+from repro.core.scheduler import HeroScheduler
+from repro.core.simulator import Simulator
+
+Observer = Callable[[float, str, Node], None]
+
+
+@dataclass
+class BackendRun:
+    """Substrate-independent record of one execution."""
+
+    makespan: float
+    events: List[Tuple[float, str, str]]      # (t, event, node id)
+    pu_busy: Dict[str, float] = field(default_factory=dict)
+    dispatches: int = 0
+    redispatches: int = 0
+
+
+class Backend(Protocol):
+    name: str
+
+    def execute(self, dag: DynamicDAG, scheduler: HeroScheduler,
+                observer: Optional[Observer] = None,
+                timeout: float = 3600.0) -> BackendRun:
+        """Run ``dag`` to completion under ``scheduler``."""
+        ...
+
+
+class SimBackend:
+    """Wraps :class:`repro.core.simulator.Simulator`.  Time is simulated
+    seconds on the modelled SoC; fault-injection knobs mirror the
+    simulator's."""
+
+    name = "sim"
+
+    def __init__(self, gt: GroundTruthPerf, straggler_prob: float = 0.0,
+                 straggler_slow: float = 4.0, fail_prob: float = 0.0,
+                 seed: int = 0):
+        self.gt = gt
+        self.straggler_prob = straggler_prob
+        self.straggler_slow = straggler_slow
+        self.fail_prob = fail_prob
+        self.seed = seed
+
+    def execute(self, dag: DynamicDAG, scheduler: HeroScheduler,
+                observer: Optional[Observer] = None,
+                timeout: float = 3600.0) -> BackendRun:
+        sim = Simulator(self.gt, scheduler,
+                        straggler_prob=self.straggler_prob,
+                        straggler_slow=self.straggler_slow,
+                        fail_prob=self.fail_prob, seed=self.seed,
+                        observer=observer)
+        res = sim.run(dag, max_time=timeout)
+        return BackendRun(makespan=res.makespan, events=res.timeline,
+                          pu_busy=dict(res.pu_busy),
+                          dispatches=res.dispatches,
+                          redispatches=res.redispatches)
+
+
+def _instant_fn(node: Node, batch: int):
+    return None
+
+
+class LiveBackend:
+    """Wraps :class:`repro.serving.executor.HeroRuntime` over one
+    ``PUExecutor`` worker thread per PU.
+
+    ``stage_fns`` maps perf-stage name -> ``(node, batch) -> result``; any
+    missing stage runs as an instant no-op, so a bare ``LiveBackend()``
+    exercises the real dispatch/heartbeat/retry machinery without models
+    ("dry" live mode).  The ``__io__`` entry handles external calls; it is
+    wrapped so admission-timer nodes sleep out their remaining arrival
+    delay instead.
+    """
+
+    name = "live"
+
+    def __init__(self, stage_fns: Optional[Dict[str, Callable]] = None,
+                 max_retries: int = 2, poll: float = 0.002):
+        self.stage_fns = dict(stage_fns or {})
+        self.max_retries = max_retries
+        self.poll = poll
+
+    def execute(self, dag: DynamicDAG, scheduler: HeroScheduler,
+                observer: Optional[Observer] = None,
+                timeout: float = 300.0) -> BackendRun:
+        from repro.serving.executor import HeroRuntime, PUExecutor
+
+        inner_io = self.stage_fns.get("__io__", _instant_fn)
+        fns = dict(self.stage_fns)
+        executors = {p: PUExecutor(p) for p in scheduler.pus if p != "io"}
+        rt = HeroRuntime(scheduler, executors, fns,
+                         max_retries=self.max_retries, observer=observer)
+
+        def io_fn(node: Node, batch: int):
+            arrival = node.payload.get("arrival")
+            if arrival is not None:
+                # sleep against the runtime's own epoch so "not before
+                # arrival" holds in run-relative time (timer threads only
+                # start once run() has set _t0)
+                base = getattr(rt, "_t0", time.monotonic())
+                time.sleep(max(arrival - (time.monotonic() - base), 0.0))
+                return None
+            return inner_io(node, batch)
+
+        fns["__io__"] = io_fn
+        try:
+            rt.run(dag, poll=self.poll, timeout=timeout)
+        finally:
+            for ex in executors.values():
+                ex.shutdown()
+        events = list(rt.events)
+        pu_busy: Dict[str, float] = {}
+        for n in dag.nodes.values():
+            if n.config is not None and n.start >= 0 and n.finish >= 0:
+                pu_busy[n.config[0]] = (pu_busy.get(n.config[0], 0.0)
+                                        + n.finish - n.start)
+        return BackendRun(
+            makespan=dag.makespan(), events=events, pu_busy=pu_busy,
+            dispatches=sum(1 for e in events if e[1] == "start"),
+            redispatches=sum(1 for e in events
+                             if e[1] in ("straggler", "retry")))

@@ -1,0 +1,74 @@
+"""Per-query results assembled from a backend run.
+
+The backends execute one shared :class:`DynamicDAG`; this module slices
+the node-level record (start/finish/config on every node, plus the event
+timeline) back into per-query :class:`QueryResult` views.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.core.dag import DynamicDAG
+
+ADMIT_STAGE = "admit"     # session-inserted arrival-timer nodes
+
+
+@dataclass
+class QueryResult:
+    qid: int
+    workflow: str                       # WorkflowSpec name
+    backend: str
+    arrival_time: float
+    finish_time: float                  # run-relative completion of last node
+    makespan: float                     # finish_time - arrival_time
+    stage_latency: Dict[str, float] = field(default_factory=dict)
+    pu_busy: Dict[str, float] = field(default_factory=dict)
+    dispatches: int = 0
+    redispatches: int = 0
+    n_nodes: int = 0
+
+    def utilization(self, pu: str) -> float:
+        """Fraction of this query's latency window ``pu`` spent on it."""
+        return self.pu_busy.get(pu, 0.0) / max(self.makespan, 1e-9)
+
+
+def collect_results(dag: DynamicDAG, handles, run, backend_name: str
+                    ) -> List[QueryResult]:
+    """Slice one shared-DAG :class:`BackendRun` into per-query results.
+
+    ``handles``: QueryHandle list (each carries ``qid``/``prefix``/
+    ``arrival_time``); nodes and events are attributed by id prefix."""
+    out = []
+    for h in handles:
+        nodes = [n for nid, n in dag.nodes.items()
+                 if nid.startswith(h.prefix) and n.stage != ADMIT_STAGE]
+        stage_latency: Dict[str, float] = {}
+        pu_busy: Dict[str, float] = {}
+        finish = h.arrival_time
+        for n in nodes:
+            if n.status != "done" or n.start < 0:
+                continue
+            dur = n.finish - n.start
+            stage_latency[n.stage] = stage_latency.get(n.stage, 0.0) + dur
+            if n.config is not None:
+                pu_busy[n.config[0]] = pu_busy.get(n.config[0], 0.0) + dur
+            finish = max(finish, n.finish)
+        dispatches = redispatches = 0
+        admit_id = f"{h.prefix}{ADMIT_STAGE}"
+        for t, event, nid in run.events:
+            if not nid.startswith(h.prefix) or nid == admit_id:
+                continue
+            if event == "start":
+                dispatches += 1
+            elif event in ("redispatch", "straggler", "retry"):
+                redispatches += 1
+        res = QueryResult(
+            qid=h.qid, workflow=h.spec.name, backend=backend_name,
+            arrival_time=h.arrival_time, finish_time=finish,
+            makespan=finish - h.arrival_time, stage_latency=stage_latency,
+            pu_busy=pu_busy, dispatches=dispatches,
+            redispatches=redispatches, n_nodes=len(nodes))
+        h.result = res
+        out.append(res)
+    return out

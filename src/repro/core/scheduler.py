@@ -54,12 +54,14 @@ class Dispatch:
 
 class HeroScheduler:
     def __init__(self, perf: LinearPerfModel, pus: Sequence[str], b0: float,
-                 cfg: SchedulerConfig = SchedulerConfig(),
+                 cfg: Optional[SchedulerConfig] = None,
                  template: Optional[WorkflowTemplate] = None):
         self.perf = perf
         self.pus: List[str] = list(pus)      # elastic: may grow/shrink
         self.b0 = b0
-        self.cfg = cfg
+        # a fresh config per scheduler: a shared default instance would leak
+        # static_map (and any toggle mutation) across schedulers
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.template = template
         self._fifo_seq: Dict[str, int] = {}
         self._seq = 0
@@ -113,10 +115,15 @@ class HeroScheduler:
                 v_cand = min(r_tmp, key=lambda n: self._fifo_seq.get(n.id, 0))
 
             if v_cand.kind == "io":
-                # external calls bypass the PU perf model entirely
+                # external calls bypass the PU perf model entirely; a node
+                # carrying an absolute ``arrival`` payload is an admission
+                # timer (HeroSession multi-query) whose remaining delay is
+                # its predicted latency
                 if "io" in idle:
+                    arr = v_cand.payload.get("arrival")
+                    p_io = max(arr - now, 0.0) if arr is not None else 0.35
                     dag.mark_running(v_cand.id, now, ("io", 1))
-                    decisions.append(Dispatch(v_cand, "io", 1, 0.35, 0.0))
+                    decisions.append(Dispatch(v_cand, "io", 1, p_io, 0.0))
                     idle.remove("io")
                 r_tmp.remove(v_cand)
                 continue

@@ -17,7 +17,7 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,16 +51,28 @@ class SimResult:
         return self.pu_busy.get(pu, 0.0) / max(self.makespan, 1e-9)
 
 
+Observer = Callable[[float, str, "Node"], None]
+
+
 class Simulator:
     def __init__(self, gt: GroundTruthPerf, scheduler: HeroScheduler,
                  straggler_prob: float = 0.0, straggler_slow: float = 4.0,
-                 fail_prob: float = 0.0, seed: int = 0):
+                 fail_prob: float = 0.0, seed: int = 0,
+                 observer: Optional[Observer] = None):
         self.gt = gt
         self.sched = scheduler
         self.rng = np.random.default_rng(seed)
         self.straggler_prob = straggler_prob
         self.straggler_slow = straggler_slow
         self.fail_prob = fail_prob
+        # streaming hook: (sim time, "start"|"done"|"redispatch", node) —
+        # what HeroSession's per-query callbacks attach to
+        self.observer = observer
+
+    def _note(self, timeline, t: float, event: str, node: Node):
+        timeline.append((t, event, node.id))
+        if self.observer is not None:
+            self.observer(t, event, node)
 
     # -- main loop -----------------------------------------------------------
     def run(self, dag: DynamicDAG, max_time: float = 3600.0) -> SimResult:
@@ -155,7 +167,7 @@ class Simulator:
             # completion
             done = active.pop(nid)
             pu_free[done.pu] = True
-            timeline.append((t, "done", nid))
+            self._note(timeline, t, "done", done.node)
             prog = done.node.payload.get("on_progress")
             dag.mark_done(nid, t)
             if prog is not None and done.node.kind == "stream_decode":
@@ -167,20 +179,24 @@ class Simulator:
 
     # -- internals -----------------------------------------------------------
     def _start(self, d: Dispatch, now: float, active, pu_free, timeline):
-        stage = self.gt.stages[d.node.stage]
+        # io-kind nodes (web calls, admission timers) need no stage model
+        stage = self.gt.stages.get(d.node.stage)
         pu = self.gt.soc.pu(d.pu) if d.pu != "io" else None
         c = Config(d.pu, d.batch)
         if d.node.kind == "io":
-            work, bw = 0.35, 0.0
+            # the scheduler's io prediction (0.35 s round trip, or the
+            # remaining admission delay for arrival-timer nodes)
+            work, bw = d.predicted_p0, 0.0
         else:
             passes = -(-max(d.node.workload, 1) // max(d.batch, 1))
             work = passes * self.gt.p0(stage, pu, c)
             bw = self.gt.bandwidth(stage, pu, c)
-        # fault injection
-        if self.rng.random() < self.straggler_prob:
+        # fault injection (admission timers are control nodes — a gated
+        # arrival must stay exact under injected faults)
+        is_timer = d.node.payload.get("arrival") is not None
+        if not is_timer and self.rng.random() < self.straggler_prob:
             work *= self.straggler_slow
-        failed = self.rng.random() < self.fail_prob
-        if failed:
+        if not is_timer and self.rng.random() < self.fail_prob:
             work *= 1e6  # never completes; straggler detection reaps it
         active[d.node.id] = ActiveTask(
             node=d.node, pu=d.pu, batch=d.batch, work_left=work,
@@ -189,7 +205,7 @@ class Simulator:
                                          // max(d.batch, 1)))
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
-        timeline.append((now, "start", d.node.id))
+        self._note(timeline, now, "start", d.node)
 
     def _cancel(self, nid: str, active, pu_free, timeline, t):
         task = active.pop(nid)
@@ -199,4 +215,4 @@ class Simulator:
         n.status = "ready"   # back to the pool; scheduler will remap
         n.start, n.config = -1.0, None
         n.payload["redispatches"] = n.payload.get("redispatches", 0) + 1
-        timeline.append((t, "redispatch", nid))
+        self._note(timeline, t, "redispatch", n)

@@ -17,17 +17,14 @@ import time
 import jax
 import numpy as np
 
+from repro.api import HeroSession
 from repro.configs import get_family, reduced
-from repro.core import (GroundTruthPerf, HeroScheduler, LinearPerfModel,
-                        SchedulerConfig, snapdragon_8gen4)
 from repro.models import build_model
-from repro.rag import (STAGE_ROLES, HashTokenizer, VectorDB, build_stages,
-                       build_workflow, chunk_documents, default_means,
-                       make_template, sample_traces, synth_documents,
+from repro.rag import (HashTokenizer, VectorDB, chunk_documents,
+                       default_means, sample_traces, synth_documents,
                        synth_query)
 from repro.rag.agents import LMAgent
 from repro.rag.embedder import Embedder, Reranker
-from repro.serving import HeroRuntime, PUExecutor
 
 
 def build_pipeline(seed: int = 0):
@@ -45,19 +42,10 @@ def build_pipeline(seed: int = 0):
     return tok, embedder, rerank, rewriter, chat
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workflow", type=int, default=2, choices=[1, 2, 3])
-    ap.add_argument("--queries", type=int, default=2)
-    ap.add_argument("--dataset", default="finqabench")
-    args = ap.parse_args()
-
-    tok, embedder, reranker, rewriter, chat = build_pipeline()
-    stages = build_stages(get_family("qwen3"))
-    soc = snapdragon_8gen4()
-    perf = LinearPerfModel().fit(GroundTruthPerf(soc, stages))
-    traces = sample_traces(args.dataset, args.queries, seed=1)
-    means = default_means(traces)
+def build_stage_fns(seed: int = 0):
+    """Wire the executable pipeline into perf-stage callables — the
+    ``stage_fns`` a live-backend :class:`HeroSession` dispatches to."""
+    tok, embedder, reranker, rewriter, chat = build_pipeline(seed)
 
     docs = synth_documents(4, 400, seed=7)
     chunks = chunk_documents(docs, tok)
@@ -66,7 +54,7 @@ def main():
     q_ids = tok.encode(query)
 
     def fn_embed(node, batch):
-        if node.id.startswith("embed_chunks"):
+        if node.stage == "embed" and "embed_chunks" in node.id:
             take = chunks[: max(batch, 1)]
             db.add(np.asarray(embedder.embed([c.token_ids for c in take])))
             return len(take)
@@ -87,24 +75,34 @@ def main():
             return "prefill"
         return agent.generate(q_ids[:16], max_new=min(batch, 8)).token_ids
 
-    stage_fns = {s: fn_llm for s in stages}
+    stage_fns = {s: fn_llm for s in
+                 ("rewrite_prefill", "rewrite_decode", "plan_prefill",
+                  "plan_decode", "refine_prefill", "refine_decode",
+                  "chat_prefill", "chat_decode")}
     stage_fns.update(embed=fn_embed, vsearch=fn_vsearch, rerank=fn_rerank,
                      __io__=lambda n, b: time.sleep(0.05))
+    return stage_fns
 
-    lat = []
-    for i, tr in enumerate(traces):
-        dag = build_workflow(args.workflow, tr, fine_grained=True)
-        sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
-                              SchedulerConfig(),
-                              template=make_template(args.workflow, means))
-        rt = HeroRuntime(sched, {p.name: PUExecutor(p.name)
-                                 for p in soc.pus}, stage_fns)
-        t0 = time.time()
-        rt.run(dag, timeout=600)
-        dt = time.time() - t0
-        lat.append(dt)
-        print(f"query {i}: {len(dag.nodes)} sub-stages in {dt:.2f}s wall")
-    print(f"mean wall latency: {np.mean(lat):.2f}s over {len(lat)} queries")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workflow", type=int, default=2, choices=[1, 2, 3])
+    ap.add_argument("--queries", type=int, default=2)
+    ap.add_argument("--dataset", default="finqabench")
+    args = ap.parse_args()
+
+    traces = sample_traces(args.dataset, args.queries, seed=1)
+    sess = HeroSession(world="sd8gen4", family="qwen3", backend="live",
+                       means=default_means(traces),
+                       stage_fns=build_stage_fns())
+    for tr in traces:
+        sess.submit(tr, wf=args.workflow)
+    results = sess.run(mode="isolated", timeout=600)
+    for res in results:
+        print(f"query {res.qid}: {res.n_nodes} sub-stages in "
+              f"{res.makespan:.2f}s wall")
+    print(f"mean wall latency: {np.mean([r.makespan for r in results]):.2f}s "
+          f"over {len(results)} queries")
 
 
 if __name__ == "__main__":

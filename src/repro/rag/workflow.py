@@ -7,193 +7,42 @@ W2  Advanced Document QA   : + LLM query rewriting (N sub-queries, each
                              compression of each retrieved set, paper [27])
 W3  Deep Researcher        : + search planner issuing web requests
 
-Dynamic inter-stage dependencies (§3.1) are real here: the rewriter's and
-planner's branches only materialize when (part of) their decode finishes —
-via node expanders and per-token-group ``on_progress`` callbacks, so the
-first sub-query's retrieval starts before the rewriter finishes decoding
-(the paper's motivating example).
-
-``fine_grained`` mirrors the scheduler's sub-stage partition (§4.2): it
-refines stage-level dependencies into per-piece ones — chunked chat prefill
-consumes each branch's refined context as soon as that branch finishes,
-instead of waiting for all of them.  Baselines schedule the coarse graph.
+The canonical workflow definitions now live in ``repro.api.spec`` as
+declarative :class:`~repro.api.spec.WorkflowSpec` objects, from which both
+the runtime :class:`DynamicDAG` (with its §3.1 dynamic branch expanders
+and per-token-group early release) and the Eq. 4
+:class:`WorkflowTemplate` prior are derived — one description, two
+artifacts.  Define new workflows there (or pass a custom spec to
+``HeroSession.submit``); the functions below are thin compatibility
+wrappers over ``builtin_spec(1..3)`` kept for the figure benchmarks.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict
 
-from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
+from repro.core.dag import DynamicDAG, WorkflowTemplate
 from repro.rag.datasets import QueryTrace
-
-
-def _add(dag: DynamicDAG, nid, stage, kind, workload, deps=(), template=None,
-         expander=None, payload=None) -> Node:
-    return dag.add(Node(id=nid, stage=stage, kind=kind,
-                        workload=max(int(workload), 1), deps=set(deps),
-                        template=template or nid, expander=expander,
-                        payload=payload or {}))
 
 
 def build_w1(trace: QueryTrace, fine_grained: bool = True,
              prefix: str = "", dag: DynamicDAG = None) -> DynamicDAG:
-    dag = dag if dag is not None else DynamicDAG()
-    N = lambda s: prefix + s  # noqa: E731 — namespacing for multi-query DAGs
-    _add(dag, N("embed_chunks"), "embed", "batchable", trace.n_chunks)
-    _add(dag, N("embed_query"), "embed", "batchable", 1)
-    _add(dag, N("vsearch"), "vsearch", "search", trace.n_chunks * 8,
-         deps=[N("embed_chunks"), N("embed_query")])
-    _add(dag, N("rerank"), "rerank", "batchable", trace.rerank_candidates,
-         deps=[N("vsearch")])
-    _add(dag, N("chat_prefill"), "chat_prefill", "stream_prefill",
-         trace.context_tokens + trace.query_tokens, deps=[N("rerank")])
-    _add(dag, N("chat_decode"), "chat_decode", "stream_decode",
-         trace.answer_tokens, deps=[N("chat_prefill")])
-    return dag
+    from repro.api.spec import builtin_spec
+    return builtin_spec(1).build_dag(trace, fine_grained=fine_grained,
+                                     prefix=prefix, dag=dag)
 
 
 def build_w2(trace: QueryTrace, fine_grained: bool = True,
              prefix: str = "", dag: DynamicDAG = None) -> DynamicDAG:
-    return _build_agentic(trace, planner=False, fine_grained=fine_grained,
-                          prefix=prefix, dag=dag)
+    from repro.api.spec import builtin_spec
+    return builtin_spec(2).build_dag(trace, fine_grained=fine_grained,
+                                     prefix=prefix, dag=dag)
 
 
 def build_w3(trace: QueryTrace, fine_grained: bool = True,
              prefix: str = "", dag: DynamicDAG = None) -> DynamicDAG:
-    return _build_agentic(trace, planner=True, fine_grained=fine_grained,
-                          prefix=prefix, dag=dag)
-
-
-def _build_agentic(trace: QueryTrace, planner: bool, fine_grained: bool,
-                   prefix: str = "", dag: DynamicDAG = None) -> DynamicDAG:
-    """W2/W3: base retrieval + rewriter branches (+ planner/web), each branch
-    refined independently (RECOMP-style), feeding a (chunked) chat prefill."""
-    dag = dag if dag is not None else DynamicDAG()
-    N = lambda s: prefix + s  # noqa: E731
-    n_sources = 1 + trace.n_subqueries + (trace.n_web_searches if planner
-                                          else 0)
-    ctx_piece = max(trace.context_tokens // n_sources, 32)
-    refine_piece = max(trace.refine_tokens // n_sources, 8)
-
-    _add(dag, N("embed_chunks"), "embed", "batchable", trace.n_chunks)
-    _add(dag, N("embed_query"), "embed", "batchable", 1)
-    _add(dag, N("vsearch_base"), "vsearch", "search", trace.n_chunks * 8,
-         deps=[N("embed_chunks"), N("embed_query")], template="vsearch")
-    _add(dag, N("rerank_base"), "rerank", "batchable", trace.rerank_candidates,
-         deps=[N("vsearch_base")], template="rerank")
-    # base branch refine
-    _add(dag, N("refine_prefill_base"), "refine_prefill", "stream_prefill",
-         ctx_piece, deps=[N("rerank_base")], template="refine_prefill")
-    _add(dag, N("refine_decode_base"), "refine_decode", "stream_decode",
-         refine_piece, deps=[N("refine_prefill_base")],
-         template="refine_decode")
-
-    # chat: chunked prefill (fine) or monolithic (coarse)
-    refine_tails: List[str] = [N("refine_decode_base")]
-    if fine_grained:
-        _add(dag, N("chat_prefill_0"), "chat_prefill", "stream_prefill",
-             ctx_piece + trace.query_tokens, deps=[N("refine_decode_base")],
-             template="chat_prefill")
-        chat_state = {"last": N("chat_prefill_0"), "pieces": 1}
-    else:
-        chat_state = {"last": None, "pieces": 0}
-
-    def add_chat_piece(d: DynamicDAG, dep: str):
-        if not fine_grained:
-            return
-        prev = chat_state["last"]
-        nid = N(f"chat_prefill_{chat_state['pieces']}")
-        _add(d, nid, "chat_prefill", "stream_prefill", ctx_piece,
-             deps=[dep, prev], template="chat_prefill")
-        chat_state["last"] = nid
-        chat_state["pieces"] += 1
-        if N("chat_decode") in d.nodes:
-            d.retarget_dep(N("chat_decode"), prev, nid)
-
-    def add_branch_refine(d: DynamicDAG, i: str, dep: str):
-        rp = _add(d, N(f"refine_prefill_{i}"), "refine_prefill",
-                  "stream_prefill", ctx_piece, deps=[dep],
-                  template="refine_prefill")
-        rd = _add(d, N(f"refine_decode_{i}"), "refine_decode", "stream_decode",
-                  refine_piece, deps=[rp.id], template="refine_decode")
-        refine_tails.append(rd.id)
-        if fine_grained:
-            add_chat_piece(d, rd.id)
-        elif N("chat_prefill") in d.nodes:
-            d.add_edge(rd.id, N("chat_prefill"))
-        return rd
-
-    # rewriter: dynamic sub-query branches with early (token-group) release
-    n_sub = trace.n_subqueries
-    per_sub = max(trace.rewrite_tokens // max(n_sub, 1), 1)
-    rw = {"done": 0, "spawned": 0}
-
-    def spawn_subquery(d: DynamicDAG, i: int, dep_id: str):
-        sq = _add(d, N(f"embed_sq{i}"), "embed", "batchable", 1, deps=[dep_id],
-                  template="embed_sq")
-        vs = _add(d, N(f"vsearch_sq{i}"), "vsearch", "search",
-                  trace.n_chunks * 8, deps=[sq.id, N("embed_chunks")],
-                  template="vsearch_sq")
-        rr = _add(d, N(f"rerank_sq{i}"), "rerank", "batchable",
-                  max(trace.rerank_candidates // 2, 4), deps=[vs.id],
-                  template="rerank_sq")
-        add_branch_refine(d, f"sq{i}", rr.id)
-
-    def rw_progress(d: DynamicDAG, piece: Node, tokens_done: int):
-        rw["done"] += tokens_done
-        while rw["spawned"] < n_sub and rw["done"] >= (rw["spawned"] + 1) * per_sub:
-            spawn_subquery(d, rw["spawned"], piece.id)
-            rw["spawned"] += 1
-
-    def rw_expander(d: DynamicDAG, node: Node):
-        while rw["spawned"] < n_sub:
-            spawn_subquery(d, rw["spawned"], node.id)
-            rw["spawned"] += 1
-
-    _add(dag, N("rewrite_prefill"), "rewrite_prefill", "stream_prefill",
-         trace.query_tokens)
-    _add(dag, N("rewrite_decode"), "rewrite_decode", "stream_decode",
-         trace.rewrite_tokens, deps=[N("rewrite_prefill")],
-         expander=rw_expander, payload={"on_progress": rw_progress})
-
-    # planner (W3): web searches, each embedded + refined
-    if planner:
-        n_web = trace.n_web_searches
-        pl = {"spawned": 0}
-
-        def spawn_web(d: DynamicDAG, i: int, dep_id: str):
-            w = _add(d, N(f"web{i}"), "web", "io", 1, deps=[dep_id],
-                     template="web")
-            e = _add(d, N(f"embed_web{i}"), "embed", "batchable", 4,
-                     deps=[w.id], template="embed_web")
-            add_branch_refine(d, N(f"web{i}"), e.id)
-
-        def pl_expander(d: DynamicDAG, node: Node):
-            while pl["spawned"] < n_web:
-                spawn_web(d, pl["spawned"], node.id)
-                pl["spawned"] += 1
-
-        _add(dag, N("plan_prefill"), "plan_prefill", "stream_prefill",
-             trace.query_tokens)
-        _add(dag, N("plan_decode"), "plan_decode", "stream_decode",
-             trace.plan_tokens, deps=[N("plan_prefill")], expander=pl_expander)
-
-    # chat tail.  Coarse: single prefill gated on every refine tail + the
-    # decode tails (so dynamically-spawned branches are always observed).
-    gate = [N("rewrite_decode")] + ([N("plan_decode")] if planner else [])
-    if fine_grained:
-        _add(dag, N("chat_decode"), "chat_decode", "stream_decode",
-             trace.answer_tokens, deps=[chat_state["last"]] + gate)
-        # late chat pieces hook themselves onto chat_decode via add_chat_piece
-        dag.nodes[N("chat_decode")].payload["chat_state"] = chat_state
-    else:
-        _add(dag, N("chat_prefill"), "chat_prefill", "stream_prefill",
-             trace.context_tokens + trace.query_tokens,
-             deps=refine_tails + gate, template="chat_prefill")
-        _add(dag, N("chat_decode"), "chat_decode", "stream_decode",
-             trace.answer_tokens, deps=[N("chat_prefill")])
-    return dag
+    from repro.api.spec import builtin_spec
+    return builtin_spec(3).build_dag(trace, fine_grained=fine_grained,
+                                     prefix=prefix, dag=dag)
 
 
 BUILDERS = {1: build_w1, 2: build_w2, 3: build_w3}
@@ -207,52 +56,10 @@ def build_workflow(wf: int, trace: QueryTrace,
 # -- workflow template (future-criticality prior, Eq. 4) ---------------------
 
 def make_template(wf: int, mean: Dict[str, float]) -> WorkflowTemplate:
-    """mean: historical means over traces (see default_means)."""
-    t = WorkflowTemplate()
-    n_sources = 1 + (mean["n_subqueries"] if wf >= 2 else 0) + (
-        mean["n_web"] if wf >= 3 else 0)
-    ctx_piece = max(mean["context_tokens"] / n_sources, 32)
-    ref_piece = max(mean["refine_tokens"] / n_sources, 8)
-    t.add_stage("embed_chunks", "embed", "batchable", mean["n_chunks"], 1.0)
-    t.add_stage("embed_query", "embed", "batchable", 1, 1.0)
-    t.add_stage("vsearch", "vsearch", "search", mean["n_chunks"] * 8, 1.0,
-                deps=["embed_chunks", "embed_query"])
-    t.add_stage("rerank", "rerank", "batchable", mean["rerank"], 1.0,
-                deps=["vsearch"])
-    prev = "rerank"
-    if wf >= 2:
-        t.add_stage("rewrite_prefill", "rewrite_prefill", "stream_prefill",
-                    mean["query_tokens"], 1.0)
-        t.add_stage("rewrite_decode", "rewrite_decode", "stream_decode",
-                    mean["rewrite_tokens"], 1.0, deps=["rewrite_prefill"])
-        t.add_stage("embed_sq", "embed", "batchable", 1,
-                    mean["n_subqueries"], deps=["rewrite_decode"])
-        t.add_stage("vsearch_sq", "vsearch", "search", mean["n_chunks"] * 8,
-                    mean["n_subqueries"], deps=["embed_sq"])
-        t.add_stage("rerank_sq", "rerank", "batchable", mean["rerank"] / 2,
-                    mean["n_subqueries"], deps=["vsearch_sq"])
-        t.add_stage("refine_prefill", "refine_prefill", "stream_prefill",
-                    ctx_piece, n_sources, deps=["rerank", "rerank_sq"])
-        t.add_stage("refine_decode", "refine_decode", "stream_decode",
-                    ref_piece, n_sources, deps=["refine_prefill"])
-        prev = "refine_decode"
-    if wf >= 3:
-        t.add_stage("plan_prefill", "plan_prefill", "stream_prefill",
-                    mean["query_tokens"], 1.0)
-        t.add_stage("plan_decode", "plan_decode", "stream_decode",
-                    mean["plan_tokens"], 1.0, deps=["plan_prefill"])
-        t.add_stage("web", "web", "io", 1, mean["n_web"],
-                    deps=["plan_decode"])
-        t.add_stage("embed_web", "embed", "batchable", 4, mean["n_web"],
-                    deps=["web"])
-        t.stages["refine_prefill"].deps.add("embed_web")
-    t.add_stage("chat_prefill", "chat_prefill", "stream_prefill",
-                (ctx_piece if wf >= 2 else mean["context_tokens"])
-                + mean["query_tokens"],
-                n_sources if wf >= 2 else 1.0, deps=[prev])
-    t.add_stage("chat_decode", "chat_decode", "stream_decode",
-                mean["answer_tokens"], 1.0, deps=["chat_prefill"])
-    return t
+    """mean: historical means over traces (see default_means).  Derived
+    from the same ``WorkflowSpec`` as the runtime DAG."""
+    from repro.api.spec import builtin_spec
+    return builtin_spec(wf).build_template(mean)
 
 
 def default_means(dataset_traces) -> Dict[str, float]:

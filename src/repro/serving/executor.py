@@ -47,18 +47,26 @@ class PUExecutor:
         self.name = name
         self._q: "queue.Queue[_Task]" = queue.Queue()
         self._alive = True
+        # queued + running tasks, counted at submit() and released when the
+        # worker finishes — guarded by a lock so busy() cannot misreport
+        # during the worker's dequeue/complete transitions (an unsynchronized
+        # counter let the scheduler double-dispatch a PU)
         self._working = 0
+        self._lock = threading.Lock()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
     def submit(self, task: _Task):
+        with self._lock:
+            self._working += 1
         self._q.put(task)
 
     def busy(self) -> bool:
         """True while the worker has queued or running work — including a
         cancelled straggler it cannot preempt (work is non-preemptible;
         the scheduler must route around it)."""
-        return self._working > 0 or not self._q.empty()
+        with self._lock:
+            return self._working > 0
 
     def shutdown(self):
         self._alive = False
@@ -69,14 +77,16 @@ class PUExecutor:
             task = self._q.get()
             if task is None:
                 return
-            self._working += 1
             task.started = time.monotonic()
             if not task.cancelled:
                 try:
                     task.result = task.fn(task.node, task.batch)
                 except Exception:                  # retry handled upstream
                     task.error = traceback.format_exc()
-            self._working -= 1
+            # release before signalling: once done_evt is visible the PU is
+            # genuinely free, so a fresh dispatch must not see busy()==True
+            with self._lock:
+                self._working -= 1
             task.done_evt.set()
 
 
@@ -86,13 +96,22 @@ class HeroRuntime:
     def __init__(self, scheduler: HeroScheduler,
                  executors: Dict[str, PUExecutor],
                  stage_fns: Dict[str, StageFn],
-                 max_retries: int = 2):
+                 max_retries: int = 2,
+                 observer: Optional[Callable[[float, str, Node], None]] = None):
         self.sched = scheduler
         self.executors = executors
         self.stage_fns = stage_fns
         self.max_retries = max_retries
         self.results: Dict[str, Any] = {}
+        # every event timestamp is run-relative (seconds since run() began),
+        # so the list is a usable timeline
         self.events: List[tuple] = []
+        self.observer = observer
+
+    def _emit(self, t: float, event: str, node: Node):
+        self.events.append((t, event, node.id))
+        if self.observer is not None:
+            self.observer(t, event, node)
 
     def add_executor(self, name: str, ex: PUExecutor):
         self.executors[name] = ex
@@ -107,6 +126,7 @@ class HeroRuntime:
     def run(self, dag: DynamicDAG, poll: float = 0.002,
             timeout: float = 300.0) -> Dict[str, Any]:
         t0 = time.monotonic()
+        self._t0 = t0   # run-relative epoch, readable by stage fns (timers)
         inflight: Dict[str, tuple] = {}     # node id -> (_Task, Dispatch, retries)
 
         def now() -> float:
@@ -120,14 +140,17 @@ class HeroRuntime:
             return sum(d.bandwidth for _, d, _ in inflight.values())
 
         def dispatch():
-            busy = {d.pu for _, d, _ in inflight.values()}
+            # io is unbounded concurrency (network threads), matching the
+            # simulator — a sleeping web call or admission timer must not
+            # block the io lane for other queries
+            busy = {d.pu for _, d, _ in inflight.values() if d.pu != "io"}
             busy |= {name for name, ex in self.executors.items()
                      if ex.busy()}
             idle = [p for p in list(self.executors) + ["io"]
                     if p not in busy]
             for d in self.sched.dispatch_pass(dag, now(), idle, b_now(),
                                               busy_until()):
-                self._launch(d, inflight, dag, retries=0)
+                self._launch(d, inflight, dag, retries=0, now_t=now())
 
         dispatch()
         while dag.unfinished():
@@ -148,9 +171,9 @@ class HeroRuntime:
                         continue
                     if task.error is not None:
                         if retries < self.max_retries:
-                            self.events.append((now(), "retry", nid))
+                            self._emit(now(), "retry", d.node)
                             self._launch(d, inflight, dag,
-                                         retries=retries + 1)
+                                         retries=retries + 1, now_t=now())
                             continue
                         raise RuntimeError(
                             f"stage {nid} failed:\n{task.error}")
@@ -159,7 +182,7 @@ class HeroRuntime:
                     dag.mark_done(nid, now())
                     if prog is not None and d.node.kind == "stream_decode":
                         prog(dag, d.node, d.node.workload)
-                    self.events.append((now(), "done", nid))
+                    self._emit(now(), "done", d.node)
                 elif task.started and not task.cancelled:
                     # straggler heartbeat (perf-model ETA as the prior, with
                     # a jitter floor and a per-node speculation cap)
@@ -169,7 +192,7 @@ class HeroRuntime:
                     if (can_spec and d.pu in self.executors
                             and time.monotonic() - task.started > eta):
                         task.cancelled = True
-                        self.events.append((now(), "straggler", nid))
+                        self._emit(now(), "straggler", d.node)
                         d.node.status = "ready"
                         d.node.start, d.node.config = -1.0, None
                         d.node.payload["redispatches"] = \
@@ -189,13 +212,14 @@ class HeroRuntime:
                 time.sleep(poll)
         return self.results
 
-    def _launch(self, d: Dispatch, inflight, dag: DynamicDAG, retries: int):
+    def _launch(self, d: Dispatch, inflight, dag: DynamicDAG, retries: int,
+                now_t: float = 0.0):
         fn = self.stage_fns.get(d.node.stage)
         if d.pu == "io" or fn is None:
             fn = self.stage_fns.get("__io__", lambda n, b: None)
         task = _Task(d.node, d.batch, fn)
         if d.node.status != "running":
-            dag.mark_running(d.node.id, 0.0, (d.pu, d.batch))
+            dag.mark_running(d.node.id, now_t, (d.pu, d.batch))
         if d.pu == "io":
             threading.Thread(target=lambda: (setattr(
                 task, "result", fn(d.node, d.batch)), task.done_evt.set()),
@@ -203,4 +227,4 @@ class HeroRuntime:
         else:
             self.executors[d.pu].submit(task)
         inflight[d.node.id] = (task, d, retries)
-        self.events.append((time.monotonic(), "start", d.node.id))
+        self._emit(now_t, "start", d.node)

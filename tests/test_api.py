@@ -1,0 +1,213 @@
+"""HeroSession facade tests: backend parity, continuous multi-query
+admission, declarative WorkflowSpec round-trips, and the four-strategy
+quickstart path."""
+import pytest
+
+from repro.api import HeroSession, LiveBackend, SimBackend
+from repro.api.spec import (BranchGroup, BranchStage, CollectorSpec,
+                            StageSpec, WorkflowSpec, builtin_spec)
+from repro.rag import STAGE_ROLES, default_means, sample_traces
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("finqabench", 4, seed=5)
+
+
+# --- backend parity ---------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["sim", "live"])
+def test_w1_completes_on_both_backends(traces, backend):
+    """The same session script runs against either substrate."""
+    sess = HeroSession(world="sd8gen4", family="qwen3", backend=backend)
+    sess.submit(traces[0], wf=1)
+    [res] = sess.run(timeout=120)
+    assert res.backend == backend
+    assert res.makespan > 0
+    # same DAG on both substrates: W1 is six stages, no dynamic branches
+    assert res.n_nodes >= 6
+    assert set(res.stage_latency) >= {"embed", "vsearch", "rerank",
+                                      "chat_prefill", "chat_decode"}
+    assert res.dispatches >= res.n_nodes
+
+
+def test_sim_live_same_dag_shape(traces):
+    """Sim and live execute the *same* spec-derived graph: every perf
+    stage the sim run touched, the live run touches too."""
+    by_backend = {}
+    for backend in ("sim", "live"):
+        sess = HeroSession(backend=backend)
+        sess.submit(traces[1], wf=1)
+        [res] = sess.run(timeout=120)
+        by_backend[backend] = res
+    assert (set(by_backend["sim"].stage_latency)
+            == set(by_backend["live"].stage_latency))
+    assert by_backend["sim"].n_nodes >= 6
+    assert by_backend["live"].n_nodes >= 6
+
+
+# --- continuous multi-query admission ---------------------------------------
+
+def test_staggered_arrival_not_started_early(traces):
+    sess = HeroSession()
+    sess.submit(traces[0], wf=1)
+    late = sess.submit(traces[1], wf=1, arrival_time=6.0)
+    r0, r1 = sess.run()
+    assert late.prefix == "q1/"
+    # no stage of the late query may start before its arrival time
+    starts = [t for t, ev, nid in sess.last_run.events
+              if ev == "start" and nid.startswith("q1/")
+              and not nid.startswith("q1/admit")]
+    assert starts and min(starts) >= 6.0 - 1e-9
+    assert r1.arrival_time == 6.0
+    assert r1.makespan == pytest.approx(r1.finish_time - 6.0)
+    # the early query was admitted immediately
+    assert r0.finish_time > 0 and r0.arrival_time == 0.0
+
+
+def test_shared_dag_merges_queries(traces):
+    sess = HeroSession()
+    for tr in traces[:3]:
+        sess.submit(tr, wf=1)
+    results = sess.run()
+    assert [r.qid for r in results] == [0, 1, 2]
+    # merged execution: every query completes, total span bounded by the
+    # sum of isolated runs
+    iso = HeroSession()
+    for tr in traces[:3]:
+        iso.submit(tr, wf=1)
+    iso_results = iso.run(mode="isolated")
+    assert max(r.finish_time for r in results) \
+        <= sum(r.makespan for r in iso_results) * 1.05
+
+
+def test_live_staggered_arrival(traces):
+    sess = HeroSession(backend="live")
+    sess.submit(traces[0], wf=1)
+    sess.submit(traces[1], wf=1, arrival_time=0.25)
+    r0, r1 = sess.run(timeout=60)
+    starts = [t for t, ev, nid in sess.last_run.events
+              if ev == "start" and nid.startswith("q1/")
+              and not nid.startswith("q1/admit")]
+    # wall-clock gating is best-effort but never early
+    assert starts and min(starts) >= 0.25 - 1e-3
+
+
+# --- declarative workflow specs ---------------------------------------------
+
+def test_custom_spec_round_trip(traces):
+    """User-defined workflow: spec -> DAG -> template, then executed
+    end-to-end through the session on both backends."""
+    spec = WorkflowSpec(
+        "summarize-each-doc",
+        statics=(
+            StageSpec("embed_docs", "embed", "batchable",
+                      lambda v: v.n_chunks, role="embed"),
+            StageSpec("plan_prefill", "plan_prefill", "stream_prefill",
+                      lambda v: v.query_tokens, role="search_llm"),
+            StageSpec("plan_decode", "plan_decode", "stream_decode",
+                      lambda v: v.plan_tokens, deps=("plan_prefill",),
+                      role="search_llm"),
+        ),
+        groups=(BranchGroup(
+            source="plan_decode", count=lambda v: v.n_docs, label="d{i}",
+            progressive=True,
+            stages=(BranchStage("summ_prefill_{i}", "refine_prefill",
+                                "stream_prefill",
+                                lambda v: v.context_tokens // 4,
+                                deps=("$source", "embed_docs"),
+                                template="summ_prefill"),
+                    BranchStage("summ_decode_{i}", "refine_decode",
+                                "stream_decode",
+                                lambda v: v.refine_tokens,
+                                deps=("$prev",),
+                                template="summ_decode")),
+        ),),
+        collector=CollectorSpec(base_dep="embed_docs"))
+
+    tr = traces[2]
+    # DAG: statics materialized, branches deferred until plan_decode runs
+    dag = spec.build_dag(tr)
+    assert "embed_docs" in dag.nodes and "chat_decode" in dag.nodes
+    assert not any(n.startswith("summ_prefill") for n in dag.nodes)
+    assert dag.nodes["plan_decode"].expander is not None
+
+    # template derived from the SAME spec
+    tmpl = spec.build_template(tr)
+    assert {"embed_docs", "plan_decode", "summ_prefill", "summ_decode",
+            "refine_prefill", "chat_decode"} <= set(tmpl.stages)
+    assert tmpl.stages["summ_prefill"].prob == tr.n_docs
+    assert tmpl.stages["summ_decode"].deps == {"summ_prefill"}
+    assert "summ_decode" in tmpl.stages["refine_prefill"].deps
+
+    # end-to-end on both substrates
+    for backend in ("sim", "live"):
+        sess = HeroSession(backend=backend)
+        sess.submit(tr, spec=spec)
+        [res] = sess.run(timeout=120)
+        # the dynamic branches actually spawned
+        assert res.n_nodes > len(spec.statics)
+        assert "refine_decode" in res.stage_latency
+
+
+def test_builtin_specs_match_legacy_builders(traces):
+    """rag.workflow's builders are thin wrappers over the specs."""
+    from repro.rag import build_workflow, make_template
+    tr = traces[0]
+    means = default_means(traces)
+    for wf in (1, 2, 3):
+        spec = builtin_spec(wf)
+        a = build_workflow(wf, tr, fine_grained=True)
+        b = spec.build_dag(tr, fine_grained=True)
+        assert set(a.nodes) == set(b.nodes)
+        assert {n.id: n.workload for n in a.nodes.values()} \
+            == {n.id: n.workload for n in b.nodes.values()}
+        ta, tb = make_template(wf, means), spec.build_template(means)
+        assert set(ta.stages) == set(tb.stages)
+        assert spec.stage_roles().items() <= STAGE_ROLES.items()
+
+
+# --- strategies / quickstart path -------------------------------------------
+
+def test_four_strategies_via_session(traces):
+    """The quickstart comparison: all four §6.1 strategies through the
+    facade, HeRo fastest."""
+    means = default_means(traces)
+    lat = {}
+    for strategy in ("llamacpp_gpu", "powerserve_npu", "ayo_like", "hero"):
+        sess = HeroSession(world="sd8gen4", family="qwen3",
+                           strategy=strategy, means=means)
+        sess.submit(traces[0], wf=2)
+        [res] = sess.run()
+        lat[strategy] = res.makespan
+        assert res.makespan > 0 and res.redispatches == 0
+    assert lat["hero"] < min(lat[s] for s in lat if s != "hero")
+
+
+def test_streaming_callbacks(traces):
+    got = {"tokens": 0, "stages": []}
+    sess = HeroSession()
+    sess.submit(traces[0], wf=2,
+                on_token=lambda h, n, t: got.__setitem__(
+                    "tokens", got["tokens"] + n),
+                on_stage_done=lambda h, node, t: got["stages"].append(
+                    node.stage))
+    [res] = sess.run()
+    # every answer token streamed, in token-group granularity
+    assert got["tokens"] == traces[0].answer_tokens
+    assert len(got["stages"]) == res.n_nodes
+
+
+def test_session_backend_instances(traces):
+    """Backend objects (not just names) plug in: custom fault-injected sim."""
+    sess = HeroSession(backend=SimBackend(HeroSession().gt,
+                                          straggler_prob=1.0,
+                                          straggler_slow=50.0, seed=1))
+    sess.submit(traces[0], wf=1)
+    [res] = sess.run()
+    assert res.redispatches >= 1
+
+    sess = HeroSession(backend=LiveBackend())
+    sess.submit(traces[0], wf=1)
+    [res] = sess.run(timeout=60)
+    assert res.backend == "live"
