@@ -81,10 +81,15 @@ class SimBackend:
                         fail_prob=self.fail_prob, seed=self.seed,
                         observer=observer)
         res = sim.run(dag, max_time=timeout)
+        # count timeline events (fused dispatches fan out to member
+        # events), the same convention LiveBackend uses — run-level
+        # counters must be backend-independent
         return BackendRun(makespan=res.makespan, events=res.timeline,
                           pu_busy=dict(res.pu_busy),
-                          dispatches=res.dispatches,
-                          redispatches=res.redispatches)
+                          dispatches=sum(1 for e in res.timeline
+                                         if e[1] == "start"),
+                          redispatches=sum(1 for e in res.timeline
+                                           if e[1] == "redispatch"))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -101,6 +106,12 @@ class LiveBackend:
     ("dry" live mode).  The ``__io__`` entry handles external calls; it is
     wrapped so admission-timer nodes sleep out their remaining arrival
     delay instead.
+
+    With ``coalesce`` on, a stage fn may receive a *fused* node (a
+    cross-query coalesced dispatch): ``node.payload["members"]`` lists the
+    member nodes, so a coalesce-aware fn can run one batched model call
+    and slice results per query; fns that ignore it still work — the
+    runtime fans completion out to every member either way.
     """
 
     name = "live"
@@ -142,6 +153,9 @@ class LiveBackend:
         events = list(rt.events)
         pu_busy: Dict[str, float] = {}
         for n in dag.nodes.values():
+            if "coalesced" in n.payload:
+                continue    # members share their fused node's interval —
+                            # counting both would double-charge the PU
             if n.config is not None and n.start >= 0 and n.finish >= 0:
                 pu_busy[n.config[0]] = (pu_busy.get(n.config[0], 0.0)
                                         + n.finish - n.start)

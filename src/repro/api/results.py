@@ -27,6 +27,8 @@ class QueryResult:
     dispatches: int = 0
     redispatches: int = 0
     n_nodes: int = 0
+    # nodes of this query that ran inside a cross-query fused dispatch
+    coalesced_nodes: int = 0
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -46,13 +48,21 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         stage_latency: Dict[str, float] = {}
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
+        coalesced = 0
         for n in nodes:
             if n.status != "done" or n.start < 0:
                 continue
             dur = n.finish - n.start
+            # stage latency is wall time in the stage; PU busy is charged
+            # by workload share when the node rode a fused (coalesced)
+            # dispatch, so per-query busy sums match real PU occupancy
+            share = n.payload.get("fused_share", 1.0)
+            if "coalesced" in n.payload:
+                coalesced += 1
             stage_latency[n.stage] = stage_latency.get(n.stage, 0.0) + dur
             if n.config is not None:
-                pu_busy[n.config[0]] = pu_busy.get(n.config[0], 0.0) + dur
+                pu_busy[n.config[0]] = (pu_busy.get(n.config[0], 0.0)
+                                        + dur * share)
             finish = max(finish, n.finish)
         dispatches = redispatches = 0
         admit_id = f"{h.prefix}{ADMIT_STAGE}"
@@ -68,7 +78,8 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             arrival_time=h.arrival_time, finish_time=finish,
             makespan=finish - h.arrival_time, stage_latency=stage_latency,
             pu_busy=pu_busy, dispatches=dispatches,
-            redispatches=redispatches, n_nodes=len(nodes))
+            redispatches=redispatches, n_nodes=len(nodes),
+            coalesced_nodes=coalesced)
         h.result = res
         out.append(res)
     return out

@@ -22,6 +22,10 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
 - ``strategy`` picks the scheduler: ``"hero"`` or one of the §6.1
   baselines (``llamacpp_gpu``/``powerserve_npu``/``ayo_like``), with the
   static maps derived from each workflow spec's stage roles.
+- ``coalesce=True`` turns on cross-query batch coalescing (multi-query
+  serving: same-stage ready work of different admitted queries merges
+  into one fused dispatch; equivalent to
+  ``cfg_overrides={"coalesce": True}``).
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
@@ -83,6 +87,7 @@ class HeroSession:
                  family: str = "qwen3", strategy: str = "hero",
                  backend: Union[str, Backend] = "sim",
                  cfg_overrides: Optional[dict] = None,
+                 coalesce: Optional[bool] = None,
                  fine_grained: Optional[bool] = None,
                  means: Optional[dict] = None,
                  pus: Optional[List[str]] = None,
@@ -93,6 +98,8 @@ class HeroSession:
             raise KeyError(f"strategy {strategy!r}; pick from {STRATEGIES}")
         self.soc, self.gt, self.perf = make_world(world, family)
         self.strategy = strategy
+        if coalesce is not None:    # sugar for the multi-query serving knob
+            cfg_overrides = {**(cfg_overrides or {}), "coalesce": coalesce}
         self.cfg_overrides = cfg_overrides
         self.fine_grained = fine_grained
         self.means = means

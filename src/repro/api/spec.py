@@ -82,6 +82,9 @@ class StageSpec:
     mean_workload: Optional[Workload] = None  # template-side override
     template_deps: Optional[Tuple[str, ...]] = None
     role: Optional[str] = None                # baseline static-map role
+    # opt this stage out of cross-query batch coalescing (e.g. stages with
+    # per-query side effects that must not share a dispatch)
+    coalescable: bool = True
 
     @property
     def tid(self) -> str:
@@ -104,6 +107,7 @@ class BranchStage:
     mean_workload: Optional[Workload] = None
     template_deps: Optional[Tuple[str, ...]] = None
     role: Optional[str] = None
+    coalescable: bool = True                  # see StageSpec.coalescable
 
 
 @dataclass(frozen=True)
@@ -204,10 +208,14 @@ class WorkflowSpec:
         def W(fn: Workload) -> int:
             return max(int(fn(v)), 1)
 
-        def add(d, nid, stage, kind, workload, deps, template):
-            return d.add(Node(id=nid, stage=stage, kind=kind,
-                              workload=max(int(workload), 1),
-                              deps=set(deps), template=template))
+        def add(d, nid, stage, kind, workload, deps, template,
+                coalescable=True):
+            n = d.add(Node(id=nid, stage=stage, kind=kind,
+                           workload=max(int(workload), 1),
+                           deps=set(deps), template=template))
+            if not coalescable:
+                n.payload["no_coalesce"] = True
+            return n
 
         gate = [gate_dep] if gate_dep is not None else []
 
@@ -253,7 +261,7 @@ class WorkflowSpec:
         for s in self.statics:
             deps = [N(d) for d in s.deps] if s.deps else list(gate)
             add(dag, N(s.id), s.stage, s.kind, W(s.workload), deps=deps,
-                template=s.tid)
+                template=s.tid, coalescable=s.coalescable)
             if col is not None and s.id == col.base_dep:
                 # base-branch refine; its chat piece is the chain head (it
                 # carries the query tokens), not an add_chat_piece link
@@ -315,7 +323,8 @@ class WorkflowSpec:
                         deps.append(N(dep))
                 node = add(d, N(bs.id.format(i=i)), bs.stage, bs.kind,
                            max(int(bs.workload(v)), 1), deps=deps,
-                           template=bs.template)
+                           template=bs.template,
+                           coalescable=bs.coalescable)
                 prev = node.id
             if g.to_collector and self.collector is not None:
                 add_branch_refine(d, g.label.format(i=i), prev)

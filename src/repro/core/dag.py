@@ -5,6 +5,13 @@ stage finishes, its ``expander`` callback may add new nodes/edges
 (G_obs(t) ⊆ G) — e.g. a query rewriter emitting N search sub-queries, or a
 search planner spawning web-search + refine branches.  The scheduler only
 ever sees the observed graph.
+
+Fused nodes: the dual of sub-stage partitioning.  ``fuse_ready`` merges
+several READY same-(stage, kind) nodes — typically the same stage of
+*different* admitted queries — into one dispatch unit whose completion
+fans back out to every member (``mark_done``), releasing each member's own
+successors.  Members leave the ready pool while fused; ``unfuse`` reverses
+an un-dispatched fusion.
 """
 from __future__ import annotations
 
@@ -98,6 +105,16 @@ class DynamicDAG:
     def mark_done(self, nid: str, t: float):
         n = self.nodes[nid]
         n.status, n.finish = DONE, t
+        members = n.payload.get("members")
+        if members:
+            # coalesced dispatch: completion fans out to every member query
+            total = max(n.workload, 1)
+            for m in members:
+                m.start, m.config = n.start, n.config
+                m.payload.pop("fused_into", None)
+                m.payload["coalesced"] = n.id
+                m.payload["fused_share"] = m.workload / total
+                self.mark_done(m.id, t)
         # dynamic dependencies: expansion happens *before* dependents are
         # released, so newly-created upstream work is observed atomically
         if n.expander is not None:
@@ -105,6 +122,39 @@ class DynamicDAG:
             n.expander = None
         for s in self._succ.get(nid, ()):
             self._refresh_status(self.nodes[s])
+
+    # -- cross-query coalescing ----------------------------------------------
+    def fuse_ready(self, members: Sequence[Node]) -> Node:
+        """Merge ≥ 2 READY nodes sharing (stage, kind) into one fused
+        dispatch unit.  Members are absorbed (status RUNNING, no config)
+        until the fused node completes; its ``mark_done`` fans completion
+        back out, so each member's successors release normally."""
+        assert len(members) >= 2
+        stage, kind = members[0].stage, members[0].kind
+        for m in members:
+            assert m.status == READY, (m.id, m.status)
+            assert (m.stage, m.kind) == (stage, kind), m.id
+        fused = Node(id=self.fresh_id(f"fused:{stage}"), stage=stage,
+                     kind=kind, workload=sum(m.workload for m in members),
+                     payload={"members": list(members)})
+        for m in members:
+            m.status = RUNNING
+            m.payload["fused_into"] = fused.id
+        self.add(fused)
+        fused.criticality = max(m.criticality for m in members)
+        return fused
+
+    def unfuse(self, fused: Node) -> List[Node]:
+        """Dissolve an un-dispatched fused node; members rejoin the ready
+        pool."""
+        assert fused.status == READY, fused.status
+        members = fused.payload["members"]
+        for m in members:
+            m.status = READY
+            m.payload.pop("fused_into", None)
+        del self.nodes[fused.id]
+        self._succ.pop(fused.id, None)
+        return members
 
     # -- analysis ------------------------------------------------------------
     def topo_order(self) -> List[Node]:

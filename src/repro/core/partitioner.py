@@ -11,13 +11,21 @@ groups of g tokens so downstream stages trigger once their data dependency
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.dag import DynamicDAG, Node
 from repro.core.perf_model import LinearPerfModel
 
 DEFAULT_BATCH_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 DEFAULT_TOKEN_GROUPS = (4, 8, 16, 32)
+
+
+def ceil_passes(workload: int, batch: int) -> int:
+    """⌈L/n⌉ passes of a dispatch at batch n, with the ≥1 floors every
+    dispatch site needs — THE shared definition: scheduler ETAs, the
+    simulator, and the live runtime must agree on it or their queue
+    estimates silently diverge."""
+    return -(-max(workload, 1) // max(batch, 1))
 
 
 def best_batch(perf: LinearPerfModel, stage: str, pu: str, L: int,
@@ -37,16 +45,24 @@ def best_batch(perf: LinearPerfModel, stage: str, pu: str, L: int,
 def shape_aware_configs(perf: LinearPerfModel, node: Node, pu: str,
                         candidates: Sequence[int] = DEFAULT_BATCH_CANDIDATES,
                         token_groups: Sequence[int] = DEFAULT_TOKEN_GROUPS,
-                        ) -> List[int]:
-    """The small candidate config set Alg. 1 enumerates for (v, k)."""
+                        cap: Optional[int] = None) -> List[int]:
+    """The small candidate config set Alg. 1 enumerates for (v, k).
+
+    ``cap`` bounds the largest batch config enumerated — fused
+    (cross-query coalesced) nodes cap at the top of the profiled grid so
+    merged dispatches stay on measured shapes."""
     if not perf.supported(node.stage, pu):
         return []
     L = node.workload
+    if cap is not None:
+        candidates = [c for c in candidates if c <= cap] or [cap]
     if node.kind == "batchable":
         n, _ = best_batch(perf, node.stage, pu, L, candidates)
         # n* plus neighbours lets the mapper trade shape vs contention
-        cands = sorted({min(n, L), min(2 * n, L), max(1, n // 2)})
-        return cands
+        cands = {min(n, L), min(2 * n, L), max(1, n // 2)}
+        if cap is not None:
+            cands = {min(c, cap) for c in cands}
+        return sorted(cands)
     if node.kind == "stream_decode":
         return [min(g, L) for g in token_groups if g <= max(L, 4)][:3] or [L]
     return [L]  # prefill / search / io run whole

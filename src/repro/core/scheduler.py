@@ -7,24 +7,29 @@ those violating the soft bandwidth budget, scores the rest with the
 contention penalty (Eq. 5), and dispatches the argmin.  If the most
 critical node has no feasible config it is deferred and the next one tried.
 
-The three techniques toggle independently (``SchedulerConfig``) which is
+The techniques toggle independently (``SchedulerConfig``) which is
 exactly what Table 3 ablates:
   - enable_partition    → Eq. 3 sub-stage partitioning
   - enable_criticality  → Eq. 4 priority (off = FIFO + earliest-finish)
   - enable_concurrency  → Eq. 5 penalty + B_soft gate (off = always admit)
+  - coalesce            → cross-query batch coalescing (the dual of Eq. 3:
+    READY batchable nodes of *different* queries sharing a (stage, kind)
+    key merge into one fused dispatch — weight sweeps and per-invocation
+    overheads are paid once for the whole group, the way Agent.xpu /
+    RAGDoll batch concurrent requests on a shared accelerator)
 ``static_map`` pins stages to PUs (the llama.cpp-GPU / Powerserve-NPU /
 Ayo-like baselines).
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import concurrency as cc
 from repro.core import criticality as crit
 from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
-from repro.core.partitioner import shape_aware_configs
+from repro.core.partitioner import ceil_passes, shape_aware_configs
 from repro.core.perf_model import LinearPerfModel
 
 
@@ -41,6 +46,15 @@ class SchedulerConfig:
     # fault tolerance: re-dispatch a node when its runtime exceeds
     # straggler_factor × predicted latency (speculative execution)
     straggler_factor: float = 3.0
+    # cross-query batch coalescing (multi-query serving; off for the
+    # paper's single-query latency protocol)
+    coalesce: bool = False
+    # largest merged batch config enumerated — the top of the profiled
+    # grid; within it Eq. 3 and the spill term pick the PU's sweet spot
+    coalesce_cap: int = 256
+    # max total workload absorbed into one fused dispatch: bounds how long
+    # a single dispatch can occupy a PU (tail-latency fairness)
+    coalesce_window: int = 512
 
 
 @dataclass
@@ -93,7 +107,24 @@ class HeroScheduler:
             if n.id not in self._fifo_seq:
                 self._fifo_seq[n.id] = self._seq
                 self._seq += 1
-
+        fused_new = self._coalesce(dag) if cfgn.coalesce else []
+        # Eq. 5 protects a single query's critical path — the right
+        # objective in the paper's one-query-at-a-time regime.  A fused
+        # node in the graph (ready or in flight) means the scheduler is in
+        # batched-serving mode (multiple admitted queries, saturating
+        # arrivals): there throughput lives on overlapping work across
+        # PUs, so the per-query contention terms stand down and only the
+        # absolute B_soft budget (line 11) throttles admission — notably,
+        # the gate must not defer the fused dispatch itself.
+        batched_mode = False
+        for n in dag.ready() + dag.running():
+            if "members" in n.payload:
+                batched_mode = True
+                # a fused node has no successors of its own: its urgency
+                # (dispatch order among ready candidates) is its most
+                # critical member's, refreshed every pass
+                n.criticality = max(m.criticality
+                                    for m in n.payload["members"])
         idle = [p for p in idle_pus if p in self.pus or p == "io"]
         busy_until = dict(busy_until or {})
         r_tmp = list(dag.ready())                               # line 5
@@ -101,14 +132,21 @@ class HeroScheduler:
         b_soft = cfgn.b_soft_frac * self.b0
 
         while idle and r_tmp:                                   # line 6
-            pool = dag.ready() + dag.running()
+            # absorbed members of an in-flight fused dispatch are RUNNING
+            # with config=None — only the fused node (which carries their
+            # max criticality and the real config) represents that work
+            # here, so members are excluded from the running pool
+            running = [n for n in dag.running() if n.config is not None
+                       or "fused_into" not in n.payload]
+            pool = dag.ready() + running
             v_star = max(pool, key=lambda n: n.criticality,
                          default=None) if pool else None        # line 7
             running_star = (v_star if v_star is not None
                             and v_star.status == "running" else
-                            next(iter(sorted(dag.running(),
+                            next(iter(sorted(running,
                                              key=lambda n: -n.criticality)),
                                  None))
+            gate_star = None if batched_mode else running_star
             if cfgn.enable_criticality:
                 v_cand = max(r_tmp, key=lambda n: n.criticality)  # line 8
             else:
@@ -144,10 +182,10 @@ class HeroScheduler:
                         continue
                     p0 = self.perf.p0(v_cand.stage, pu, batch)
                     phi = self.perf.phi(v_cand.stage, B_now + b)
-                    passes = -(-max(v_cand.workload, 1) // max(batch, 1))
+                    passes = ceil_passes(v_cand.workload, batch)
                     f_cand = start + passes * p0 * phi          # line 12 (Eq. 2)
                     w_b = cc.contention_penalty(
-                        self.perf, running_star, b, B_now, now
+                        self.perf, gate_star, b, B_now, now
                     ) if (cfgn.enable_concurrency and is_idle) else 0.0
                     score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
                     d = Dispatch(v_cand, pu, batch, p0, b)
@@ -158,22 +196,23 @@ class HeroScheduler:
                 r_tmp.remove(v_cand)
                 continue
             _, d, _ = best
-            if (cfgn.enable_concurrency and running_star is not None
-                    and running_star.id != d.node.id
-                    and running_star.config
-                    and running_star.config[0] != "io"):
+            if (cfgn.enable_concurrency and gate_star is not None
+                    and gate_star.id != d.node.id
+                    and gate_star.config
+                    and gate_star.config[0] != "io"):
                 # Eq. 5 admission gate: parallelism is admitted only when it
                 # does not significantly impede critical-path progress —
                 # defer when the contention damage to v* exceeds the overlap
                 # benefit (the candidate's own runtime).
-                phi0 = self.perf.phi(running_star.stage, B_now)
-                phi1 = self.perf.phi(running_star.stage,
+                phi0 = self.perf.phi(gate_star.stage, B_now)
+                phi1 = self.perf.phi(gate_star.stage,
                                      B_now + d.bandwidth)
-                sp, sb = running_star.config
-                p_star = self.perf.p0(running_star.stage, sp, sb) *                     -(-max(running_star.workload, 1) // max(sb, 1))
+                sp, sb = gate_star.config
+                p_star = (self.perf.p0(gate_star.stage, sp, sb)
+                          * ceil_passes(gate_star.workload, sb))
                 damage = (phi1 - phi0) * p_star
-                benefit = d.predicted_p0 * -(-max(d.node.workload, 1)
-                                             // max(d.batch, 1))
+                benefit = d.predicted_p0 * ceil_passes(d.node.workload,
+                                                       d.batch)
                 if cfgn.alpha * damage > benefit:
                     r_tmp.remove(v_cand)
                     continue
@@ -182,11 +221,60 @@ class HeroScheduler:
             dag.mark_running(piece.id, now, (d.pu, d.batch))    # line 17
             decisions.append(d)
             idle.remove(d.pu)                                   # line 18-19
-            passes = -(-max(piece.workload, 1) // max(d.batch, 1))
+            passes = ceil_passes(piece.workload, d.batch)
             busy_until[d.pu] = now + passes * d.predicted_p0
             r_tmp = [n for n in dag.ready() if n not in
                      [x.node for x in decisions]]
+        for f in fused_new:
+            if f.status == "ready":       # never dispatched: dissolve so
+                dag.unfuse(f)             # members stay schedulable
+                self._fifo_seq.pop(f.id, None)
         return decisions
+
+    # -- cross-query coalescing ----------------------------------------------
+    @staticmethod
+    def _query_key(nid: str) -> str:
+        """Admitted-query namespace of a node id (HeroSession prefixes
+        shared-DAG nodes with ``q<i>/``; un-prefixed ids share one key)."""
+        return nid.split("/", 1)[0] if "/" in nid else ""
+
+    def _coalesce(self, dag: DynamicDAG) -> List[Node]:
+        """Group READY batchable nodes that share a (stage, kind) key
+        across different admitted queries and fuse each group into one
+        dispatch unit.  The fused node then flows through the normal
+        Alg. 1 machinery: ``shape_aware_configs`` enumerates tile-aligned
+        merged configs (capped at ``coalesce_cap``) and the Eq. 5 gate
+        prunes them like any other candidate.  Fusions that do not
+        dispatch this pass are dissolved before returning."""
+        cfgn = self.cfg
+        groups: Dict[Tuple[str, str], List[Node]] = {}
+        for n in dag.ready():
+            if (n.kind != "batchable" or "members" in n.payload
+                    or n.payload.get("no_coalesce")):
+                continue
+            groups.setdefault((n.stage, n.kind), []).append(n)
+        created: List[Node] = []
+        for nodes in groups.values():
+            if len({self._query_key(n.id) for n in nodes}) < 2:
+                continue                   # cross-query only
+            # most critical members first; the window bounds PU occupancy.
+            # Oversized nodes are skipped (they dispatch solo) rather than
+            # blocking fusion of the smaller nodes behind them.
+            nodes.sort(key=lambda n: -n.criticality)
+            take: List[Node] = []
+            total = 0
+            for n in nodes:
+                if total + n.workload > cfgn.coalesce_window:
+                    continue
+                take.append(n)
+                total += n.workload
+            if len({self._query_key(n.id) for n in take}) < 2:
+                continue
+            fused = dag.fuse_ready(take)
+            self._fifo_seq[fused.id] = min(
+                self._fifo_seq.get(n.id, self._seq) for n in take)
+            created.append(fused)
+        return created
 
     # -- helpers -------------------------------------------------------------
     def _capable_pus(self, node: Node, idle: Sequence[str]) -> List[str]:
@@ -202,6 +290,11 @@ class HeroScheduler:
     def _configs(self, node: Node, pu: str) -> List[int]:
         if node.kind == "io":
             return [max(node.workload, 1)]
+        if "members" in node.payload:
+            # fused dispatch: coalescing IS a batching decision, so merged
+            # shape configs are enumerated even with partitioning ablated
+            return shape_aware_configs(self.perf, node, pu,
+                                       cap=self.cfg.coalesce_cap)
         if not self.cfg.enable_partition:
             return [max(node.workload, 1)]
         return shape_aware_configs(self.perf, node, pu,
@@ -215,6 +308,8 @@ class HeroScheduler:
         Partitioning is recomputed on the remaining workload at the next
         dispatch (paper §4.2)."""
         L = node.workload
+        if "members" in node.payload:
+            return node    # fused dispatches run whole (membership is fixed)
         if not self.cfg.enable_partition or n >= L or node.kind in (
                 "io", "search", "stream_prefill"):
             return node

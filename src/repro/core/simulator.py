@@ -14,14 +14,14 @@ retry close the loop — exercised by tests/test_fault_tolerance.py.
 """
 from __future__ import annotations
 
-import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.dag import DynamicDAG, Node
+from repro.core.partitioner import ceil_passes
 from repro.core.perf_model import Config, GroundTruthPerf
 from repro.core.scheduler import Dispatch, HeroScheduler
 
@@ -73,6 +73,11 @@ class Simulator:
         timeline.append((t, event, node.id))
         if self.observer is not None:
             self.observer(t, event, node)
+        # a fused (cross-query coalesced) dispatch is every member's
+        # lifecycle event too: per-query timelines and streaming callbacks
+        # see member ids, not the synthetic fused id
+        for m in node.payload.get("members", ()):
+            self._note(timeline, t, event, m)
 
     # -- main loop -----------------------------------------------------------
     def run(self, dag: DynamicDAG, max_time: float = 3600.0) -> SimResult:
@@ -164,14 +169,16 @@ class Simulator:
                 result.redispatches += 1
                 dispatch(t)
                 continue
-            # completion
+            # completion — mark_done BEFORE emitting "done", mirroring
+            # HeroRuntime: observers must see final node state (and fused
+            # fan-out metadata) identically on both substrates
             done = active.pop(nid)
             pu_free[done.pu] = True
-            self._note(timeline, t, "done", done.node)
             prog = done.node.payload.get("on_progress")
             dag.mark_done(nid, t)
             if prog is not None and done.node.kind == "stream_decode":
                 prog(dag, done.node, done.node.workload)
+            self._note(timeline, t, "done", done.node)
             refresh_rates()
             dispatch(t)
         result.makespan = dag.makespan()
@@ -188,7 +195,7 @@ class Simulator:
             # remaining admission delay for arrival-timer nodes)
             work, bw = d.predicted_p0, 0.0
         else:
-            passes = -(-max(d.node.workload, 1) // max(d.batch, 1))
+            passes = ceil_passes(d.node.workload, d.batch)
             work = passes * self.gt.p0(stage, pu, c)
             bw = self.gt.bandwidth(stage, pu, c)
         # fault injection (admission timers are control nodes — a gated
@@ -201,8 +208,8 @@ class Simulator:
         active[d.node.id] = ActiveTask(
             node=d.node, pu=d.pu, batch=d.batch, work_left=work,
             bandwidth=bw, dispatched_at=now,
-            predicted=d.predicted_p0 * -(-max(d.node.workload, 1)
-                                         // max(d.batch, 1)))
+            predicted=d.predicted_p0 * ceil_passes(d.node.workload,
+                                                   d.batch))
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
         self._note(timeline, now, "start", d.node)

@@ -18,7 +18,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, dt_ref, B_ref, C_ref, dA_ref, y_ref, S_ref, *,

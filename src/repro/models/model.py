@@ -6,7 +6,6 @@ by the multi-pod dry-run and the roofline extraction.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ workflow builders so the two paths stay in lockstep.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Model, build_model
-from repro.rag.tokenizer import EOS, HashTokenizer
+from repro.rag.tokenizer import EOS
 
 
 @dataclass

@@ -2,7 +2,7 @@
 StageModel dict + the role map used by baseline static mappings."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.configs import ModelConfig
 from repro.core.perf_model import StageModel

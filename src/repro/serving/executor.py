@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.dag import DynamicDAG, Node
+from repro.core.partitioner import ceil_passes
 from repro.core.scheduler import Dispatch, HeroScheduler
 
 StageFn = Callable[[Node, int], Any]   # (node, batch) -> result
@@ -112,6 +113,11 @@ class HeroRuntime:
         self.events.append((t, event, node.id))
         if self.observer is not None:
             self.observer(t, event, node)
+        # fused (cross-query coalesced) dispatches fan events out to their
+        # members — same convention as the simulator, so per-query
+        # attribution is backend-independent
+        for m in node.payload.get("members", ()):
+            self._emit(t, event, m)
 
     def add_executor(self, name: str, ex: PUExecutor):
         self.executors[name] = ex
@@ -132,8 +138,15 @@ class HeroRuntime:
         def now() -> float:
             return time.monotonic() - t0
 
+        def predicted_total(d: Dispatch) -> float:
+            # a dispatch runs ceil(L/batch) passes of p0 each — fused
+            # (cross-query coalesced) nodes run whole, so multi-pass
+            # dispatches are the norm there, and ETAs must account for it
+            # exactly as the simulator does
+            return d.predicted_p0 * ceil_passes(d.node.workload, d.batch)
+
         def busy_until():
-            return {d.pu: d_task.started - t0 + d.predicted_p0
+            return {d.pu: d_task.started - t0 + predicted_total(d)
                     for d_task, d, _ in inflight.values()}
 
         def b_now() -> float:
@@ -186,7 +199,7 @@ class HeroRuntime:
                 elif task.started and not task.cancelled:
                     # straggler heartbeat (perf-model ETA as the prior, with
                     # a jitter floor and a per-node speculation cap)
-                    eta = max(d.predicted_p0 *
+                    eta = max(predicted_total(d) *
                               self.sched.cfg.straggler_factor, 0.05)
                     can_spec = d.node.payload.get("redispatches", 0) < 4
                     if (can_spec and d.pu in self.executors

@@ -8,7 +8,6 @@ train_step when ``compress_pod_grads`` is enabled.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

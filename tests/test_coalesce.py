@@ -1,0 +1,232 @@
+"""Cross-query batch coalescing: DAG-level fuse/unfuse semantics, scheduler
+grouping rules, sim/live parity, the staggered-arrival makespan regression
+bound, and golden determinism of W1–W3 across the four strategies.
+
+Deliberately hypothesis-free: this is the deterministic tier-1 coverage
+that runs in every environment.
+"""
+import numpy as np
+import pytest
+
+from repro.api import HeroSession
+from repro.api.session import make_world
+from repro.api.spec import builtin_spec
+from repro.core import DynamicDAG, HeroScheduler, SchedulerConfig, Simulator
+from repro.core.dag import Node
+from repro.rag import default_means, sample_traces
+
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("hotpotqa", 8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def means(traces):
+    return default_means(traces)
+
+
+# --- DAG-level fused-node semantics ------------------------------------------
+
+def _two_query_dag():
+    dag = DynamicDAG()
+    a = dag.add(Node("q0/embed", "embed", "batchable", 24))
+    b = dag.add(Node("q1/embed", "embed", "batchable", 40))
+    sa = dag.add(Node("q0/rerank", "rerank", "batchable", 8,
+                      deps={"q0/embed"}))
+    sb = dag.add(Node("q1/rerank", "rerank", "batchable", 8,
+                      deps={"q1/embed"}))
+    return dag, a, b, sa, sb
+
+
+def test_fuse_ready_hides_members_and_unfuse_restores():
+    dag, a, b, _, _ = _two_query_dag()
+    fused = dag.fuse_ready([a, b])
+    assert fused.workload == 64
+    assert fused.status == "ready"
+    ready_ids = {n.id for n in dag.ready()}
+    assert fused.id in ready_ids
+    assert "q0/embed" not in ready_ids and "q1/embed" not in ready_ids
+    members = dag.unfuse(fused)
+    assert {m.id for m in members} == {"q0/embed", "q1/embed"}
+    assert {n.id for n in dag.ready()} == {"q0/embed", "q1/embed"}
+    assert fused.id not in dag.nodes
+
+
+def test_fused_completion_fans_out_to_members():
+    dag, a, b, sa, sb = _two_query_dag()
+    fused = dag.fuse_ready([a, b])
+    dag.mark_running(fused.id, 1.0, ("npu", 32))
+    assert sa.status == "pending" and sb.status == "pending"
+    dag.mark_done(fused.id, 3.5)
+    for m in (a, b):
+        assert m.status == "done"
+        assert (m.start, m.finish) == (1.0, 3.5)
+        assert m.config == ("npu", 32)
+        assert m.payload["coalesced"] == fused.id
+    assert a.payload["fused_share"] == pytest.approx(24 / 64)
+    assert b.payload["fused_share"] == pytest.approx(40 / 64)
+    # successors of BOTH member queries released by one completion
+    assert sa.status == "ready" and sb.status == "ready"
+
+
+# --- scheduler grouping rules ------------------------------------------------
+
+def _sched(perf, soc, **cfg):
+    return HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
+                         SchedulerConfig(coalesce=True, **cfg))
+
+
+def test_coalesce_is_cross_query_only():
+    soc, gt, perf = make_world("sd8gen4", "qwen3")
+    dag = DynamicDAG()
+    dag.add(Node("q0/embed_a", "embed", "batchable", 16))
+    dag.add(Node("q0/embed_b", "embed", "batchable", 16))
+    assert _sched(perf, soc)._coalesce(dag) == []   # same query: no fusion
+    dag.add(Node("q1/embed_a", "embed", "batchable", 16))
+    [fused] = _sched(perf, soc)._coalesce(dag)
+    assert fused.workload == 48
+
+
+def test_coalesce_respects_no_coalesce_and_window():
+    soc, gt, perf = make_world("sd8gen4", "qwen3")
+    dag = DynamicDAG()
+    n0 = dag.add(Node("q0/embed", "embed", "batchable", 16))
+    n1 = dag.add(Node("q1/embed", "embed", "batchable", 16))
+    n0.payload["no_coalesce"] = n1.payload["no_coalesce"] = True
+    assert _sched(perf, soc)._coalesce(dag) == []
+    # window bounds total absorbed workload
+    dag2 = DynamicDAG()
+    for q in range(4):
+        dag2.add(Node(f"q{q}/embed", "embed", "batchable", 100))
+    [fused] = _sched(perf, soc, coalesce_window=250)._coalesce(dag2)
+    assert fused.workload <= 250
+    assert len(fused.payload["members"]) == 2
+
+
+def test_spec_coalescable_flag_reaches_nodes(traces):
+    import dataclasses
+    spec = builtin_spec(1)
+    statics = tuple(dataclasses.replace(s, coalescable=(s.id != "rerank"))
+                    for s in spec.statics)
+    dag = dataclasses.replace(spec, statics=statics).build_dag(traces[0])
+    assert dag.nodes["rerank"].payload.get("no_coalesce") is True
+    assert "no_coalesce" not in dag.nodes["embed_chunks"].payload
+
+
+# --- end-to-end invariants under coalescing ----------------------------------
+
+def test_coalesced_run_preserves_dependencies_and_workload(traces):
+    """Core-level shared-DAG run with coalescing: every dependency is
+    respected through fused fan-outs, per-group workload is conserved,
+    and fused shares sum to 1."""
+    soc, gt, perf = make_world("sd8gen4", "qwen3")
+    dag = DynamicDAG()
+    spec = builtin_spec(1)
+    for q, tr in enumerate(traces[:4]):
+        spec.build_dag(tr, prefix=f"q{q}/", dag=dag)
+    sched = HeroScheduler(perf, [p.name for p in soc.pus], soc.dram_bw,
+                          SchedulerConfig(coalesce=True))
+    Simulator(gt, sched).run(dag)
+    assert not dag.unfinished()
+    fused_nodes = [n for n in dag.nodes.values() if "members" in n.payload]
+    assert fused_nodes, "no cross-query fusion happened on 4 merged queries"
+    for n in dag.nodes.values():
+        for d in n.deps:
+            assert dag.nodes[d].finish <= n.start + 1e-9, (d, n.id)
+    for f in fused_nodes:
+        members = f.payload["members"]
+        assert sum(m.workload for m in members) == f.workload
+        assert sum(m.payload["fused_share"] for m in members) \
+            == pytest.approx(1.0)
+        assert all(m.finish == f.finish for m in members)
+
+
+def test_sim_live_parity_with_coalesce(means):
+    """Same per-query node sets, stages, and coalesced dispatches on both
+    substrates."""
+    short = sample_traces("finqabench", 3, seed=5)
+    by = {}
+    for backend in ("sim", "live"):
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           coalesce=True, backend=backend)
+        for tr in short:
+            sess.submit(tr, wf=1)
+        by[backend] = sess.run(timeout=120)
+    for s, l in zip(by["sim"], by["live"]):
+        assert s.qid == l.qid
+        assert set(s.stage_latency) == set(l.stage_latency)
+        assert s.n_nodes == l.n_nodes
+        assert s.dispatches >= s.n_nodes
+        assert l.dispatches >= l.n_nodes
+    assert sum(r.coalesced_nodes for r in by["sim"]) > 0
+    assert sum(r.coalesced_nodes for r in by["live"]) > 0
+
+
+def test_live_multipass_fused_dispatch_not_reaped_as_straggler(means):
+    """A fused dispatch runs whole — ceil(L/batch) passes — so the live
+    runtime's straggler ETA must scale with the pass count (a per-pass ETA
+    would spuriously cancel every large fused dispatch)."""
+    big = sample_traces("hotpotqa", 4, seed=7)   # ~40-90 chunks per query
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, backend="live")
+    for tr in big:
+        sess.submit(tr, wf=1)
+    res = sess.run(timeout=60)
+    assert sum(r.coalesced_nodes for r in res) > 0
+    assert sum(r.redispatches for r in res) == 0
+
+
+def test_coalesced_makespan_not_worse_on_staggered_w1(traces, means):
+    """The ISSUE acceptance bar: on a staggered 8-query W1 workload,
+    coalescing improves total makespan (throughput) and does not regress
+    per-query p99 latency by more than 10%."""
+    out = {}
+    for coalesce in (False, True):
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           coalesce=coalesce)
+        for qi, tr in enumerate(traces):
+            sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+        res = sess.run()
+        lats = np.array([r.makespan for r in res])
+        out[coalesce] = (max(r.finish_time for r in res),
+                         float(np.percentile(lats, 99)),
+                         sum(r.coalesced_nodes for r in res))
+    (base_total, base_p99, _), (co_total, co_p99, co_n) = out[False], out[True]
+    assert co_n > 0
+    assert co_total <= base_total
+    assert co_p99 <= base_p99 * 1.10
+
+
+# --- golden determinism ------------------------------------------------------
+
+def test_w1_w3_makespans_deterministic_across_strategies(traces, means):
+    """Two independent sessions produce bit-identical makespans for every
+    (workflow, strategy) cell — the sim and scheduler have no hidden
+    nondeterminism for the goldens to drift on."""
+    def table():
+        out = {}
+        for wf in (1, 2, 3):
+            for strategy in ("llamacpp_gpu", "powerserve_npu", "ayo_like",
+                             "hero"):
+                sess = HeroSession(world="sd8gen4", family="qwen3",
+                                   strategy=strategy, means=means)
+                sess.submit(traces[0], wf=wf)
+                [res] = sess.run(mode="isolated")
+                out[(wf, strategy)] = res.makespan
+        return out
+
+    a, b = table(), table()
+    assert a == b
+    assert all(v > 0 for v in a.values())
+
+
+def test_coalesced_shared_run_deterministic(traces, means):
+    def once():
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           coalesce=True)
+        for qi, tr in enumerate(traces[:6]):
+            sess.submit(tr, wf=2, arrival_time=qi * 0.25)
+        return [r.makespan for r in sess.run()]
+
+    assert once() == once()

@@ -1,11 +1,16 @@
 """Coverage for the beyond-paper extensions: chunked attention, multi-query
 DAG namespacing, Eq.3 optimality property, template priors, vector-db
-ordering property."""
+ordering property.
+
+Requires ``hypothesis`` (CI installs it); skips cleanly where it is absent.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dag import DynamicDAG, WorkflowTemplate
 from repro.core.partitioner import DEFAULT_BATCH_CANDIDATES, best_batch

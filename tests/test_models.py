@@ -8,7 +8,12 @@ import pytest
 from repro.configs import get_config, list_archs, reduced
 from repro.models import build_model
 
-ARCHS = list_archs()
+# the big-architecture reduced configs still cost 5-25 s each to trace and
+# compile on CPU; they run in CI's parallel slow job
+SLOW_ARCHS = {"deepseek-v3-671b", "deepseek-v2-236b", "llama-3.2-vision-90b",
+              "mistral-large-123b", "zamba2-1.2b"}
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS else a
+         for a in list_archs()]
 
 
 def _batch(cfg, B, S, key):

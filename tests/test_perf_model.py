@@ -1,0 +1,129 @@
+"""LinearPerfModel property tests (satellite of the coalescing PR).
+
+Runs everywhere: the deterministic property sweeps below draw hundreds of
+seeded samples without needing hypothesis.  When hypothesis IS installed
+(CI), the same properties are additionally explored generatively.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Config, GroundTruthPerf, LinearPerfModel, StageModel,
+                        snapdragon_8gen4)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def world():
+    soc = snapdragon_8gen4()
+    stages = {
+        "embed": StageModel("embed", int(6e8), 1024, "batchable",
+                            item_tokens=128),
+        "rerank": StageModel("rerank", int(6e8), 1024, "batchable",
+                             item_tokens=160),
+        "search": StageModel("search", 0, 1024, "search"),
+        "prefill": StageModel("prefill", int(4e9), 2560, "stream_prefill"),
+        "decode": StageModel("decode", int(4e9), 2560, "stream_decode"),
+    }
+    gt = GroundTruthPerf(soc, stages)
+    perf = LinearPerfModel().fit(gt)
+    return soc, stages, gt, perf
+
+
+def _pairs(perf):
+    return sorted(perf.coef)
+
+
+# --- positivity + grid exactness --------------------------------------------
+
+def test_p0_and_bandwidth_positive_everywhere(world):
+    """p0 and bandwidth stay strictly positive on and far off the profiled
+    grid (the log-space fit guarantees this by construction)."""
+    soc, stages, gt, perf = world
+    rng = np.random.default_rng(7)
+    batches = np.unique(rng.integers(1, 513, size=200))
+    for stage, pu in _pairs(perf):
+        for n in batches:
+            assert perf.p0(stage, pu, int(n)) > 0.0, (stage, pu, n)
+            assert perf.bandwidth(stage, pu, int(n)) > 0.0, (stage, pu, n)
+
+
+def test_profiled_grid_points_exact(world):
+    """Every profiled (stage, pu, batch) point reproduces the measurement
+    exactly — the lookup table short-circuits the regression."""
+    soc, stages, gt, perf = world
+    for (sname, pname), tab in perf.table.items():
+        stage, pu = stages[sname], soc.pu(pname)
+        for n in tab:
+            assert perf.p0(sname, pname, n) == gt.p0(
+                stage, pu, Config(pname, n)), (sname, pname, n)
+            assert perf.bandwidth(sname, pname, n) == gt.bandwidth(
+                stage, pu, Config(pname, n)), (sname, pname, n)
+
+
+# --- phi monotonicity --------------------------------------------------------
+
+def test_phi_monotone_in_bandwidth(world):
+    """φ(B) ≥ 1 and non-decreasing in B — including the below-knee region
+    where the raw quadratic fit may dip (the projection must flatten it)."""
+    soc, stages, gt, perf = world
+    rng = np.random.default_rng(13)
+    for sname in stages:
+        Bs = np.sort(rng.uniform(0.0, 2.5 * soc.dram_bw, size=300))
+        phis = [perf.phi(sname, float(B)) for B in Bs]
+        assert min(phis) >= 1.0
+        assert all(b >= a for a, b in zip(phis, phis[1:])), sname
+
+
+# --- persistence -------------------------------------------------------------
+
+def test_save_load_roundtrip_bit_exact(world, tmp_path):
+    """save/load reproduces every prediction bit-exactly: table hits,
+    off-grid regression values, and φ."""
+    soc, stages, gt, perf = world
+    path = str(tmp_path / "profile.json")
+    perf.save(path)
+    loaded = LinearPerfModel.load(path)
+    rng = np.random.default_rng(23)
+    batches = np.unique(np.concatenate([
+        rng.integers(1, 600, size=64),
+        [1, 8, 16, 32, 64, 128, 256]]))          # on-grid and off-grid
+    for stage, pu in _pairs(perf):
+        for n in batches:
+            n = int(n)
+            assert loaded.p0(stage, pu, n) == perf.p0(stage, pu, n)
+            assert loaded.bandwidth(stage, pu, n) == \
+                perf.bandwidth(stage, pu, n)
+    for sname in stages:
+        for B in rng.uniform(0, 2 * soc.dram_bw, size=32):
+            assert loaded.phi(sname, float(B)) == perf.phi(sname, float(B))
+
+
+# --- generative variants (CI: hypothesis installed) --------------------------
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(batch=st.integers(1, 2048))
+    def test_p0_positive_generative(batch):
+        soc = snapdragon_8gen4()
+        stages = {"embed": StageModel("embed", int(6e8), 1024, "batchable")}
+        perf = LinearPerfModel().fit(GroundTruthPerf(soc, stages))
+        for pu in ("cpu", "gpu", "npu"):
+            assert perf.p0("embed", pu, batch) > 0.0
+            assert perf.bandwidth("embed", pu, batch) > 0.0
+
+    @settings(max_examples=60, deadline=None)
+    @given(b1=st.floats(0, 2.5), b2=st.floats(0, 2.5))
+    def test_phi_monotone_generative(b1, b2):
+        soc = snapdragon_8gen4()
+        stages = {"decode": StageModel("decode", int(4e9), 2560,
+                                       "stream_decode")}
+        perf = LinearPerfModel().fit(GroundTruthPerf(soc, stages))
+        lo, hi = sorted((b1, b2))
+        assert 1.0 <= perf.phi("decode", lo * soc.dram_bw) \
+            <= perf.phi("decode", hi * soc.dram_bw)

@@ -1,9 +1,16 @@
-"""HeRo core unit tests + hypothesis property tests on scheduler invariants."""
+"""HeRo core unit tests + hypothesis property tests on scheduler invariants.
+
+Requires ``hypothesis`` (CI installs it); skips cleanly where it is absent.
+Deterministic scheduler coverage that must run everywhere lives in
+``test_coalesce.py`` / ``test_perf_model.py``.
+"""
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Config, DynamicDAG, GroundTruthPerf, HeroScheduler,
                         LinearPerfModel, SchedulerConfig, Simulator,

@@ -108,6 +108,7 @@ def test_tpu_slice_deployment_runs():
     assert res.makespan < 5.0          # a pod is far faster than a phone
 
 
+@pytest.mark.slow
 def test_executable_pipeline_end_to_end():
     """The real JAX pipeline (tiny models) under the HeRo wall-clock
     runtime: chunk -> embed -> index -> search -> rerank -> agents -> chat."""

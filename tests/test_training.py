@@ -38,6 +38,7 @@ def test_loss_decreases_on_fixed_batch():
     assert losses[-1] < losses[0] - 0.5, losses
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     cfg = reduced(get_config("granite-3-2b"))
     batch = next(_data(cfg, B=4))
