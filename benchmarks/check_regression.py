@@ -1,0 +1,79 @@
+"""Perf-regression gate for the serving benchmark (CI ``bench-smoke``).
+
+Compares a fresh ``BENCH_serving.json`` (written by
+``benchmarks/multiquery.py --bench-out``) against the committed baseline
+and fails when p99 latency or makespan of any (regime, scheduler) cell
+regresses by more than ``--tol`` (default 10%).  Also enforces the
+structural serving claim behind the continuous-decode-batching PR: in the
+saturating regime, ``hero+decode_batch`` must keep its p99 win over the
+stage-coalescing-only scheduler.
+
+    python benchmarks/check_regression.py BENCH_serving.json \
+        benchmarks/baselines/serving_baseline.json --tol 0.10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# the cells the gate tracks; higher-is-worse metrics only
+GATED_METRICS = ("p99", "total")
+
+
+def compare(current: dict, baseline: dict, tol: float) -> list:
+    """Return a list of human-readable violations (empty = gate passes)."""
+    violations = []
+    for regime, cells in baseline["regimes"].items():
+        cur_cells = current.get("regimes", {}).get(regime)
+        if cur_cells is None:
+            violations.append(f"regime {regime!r} missing from current run")
+            continue
+        for variant, base_row in cells.items():
+            cur_row = cur_cells.get(variant)
+            if cur_row is None:
+                violations.append(
+                    f"{regime}/{variant} missing from current run")
+                continue
+            for metric in GATED_METRICS:
+                base, cur = base_row[metric], cur_row[metric]
+                if cur > base * (1.0 + tol):
+                    violations.append(
+                        f"{regime}/{variant} {metric}: {cur:.2f}s vs "
+                        f"baseline {base:.2f}s (+{(cur / base - 1) * 100:.1f}%"
+                        f" > {tol * 100:.0f}% tolerance)")
+    # the structural claim: continuous decode batching beats
+    # stage-coalescing-only p99 under saturating arrivals
+    sat = current.get("regimes", {}).get("saturated", {})
+    dec, co = sat.get("hero+decode_batch"), sat.get("hero+coalesce")
+    if dec and co and dec["p99"] >= co["p99"]:
+        violations.append(
+            f"saturated: hero+decode_batch p99 {dec['p99']:.2f}s no longer "
+            f"beats hero+coalesce p99 {co['p99']:.2f}s")
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH_serving.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    violations = compare(current, baseline, args.tol)
+    if violations:
+        print("PERF REGRESSION GATE FAILED:")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    n = sum(len(c) for c in baseline["regimes"].values())
+    print(f"perf gate OK: {n} cells within {args.tol * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,11 +12,11 @@ them.  Three admission regimes are compared:
                  admission — later queries join the running DAG via
                  arrival-gated timer nodes).
 
-``run_saturated`` is the cross-query coalescing ablation: a
-saturating-arrival regime (queries arrive faster than the single-query
-service rate, so same-stage ready work from different queries piles up)
-comparing the plain HeRo scheduler against ``coalesce=True``, reporting
-throughput and p50/p99 per-query latency.
+``serving_metrics`` is the serving ablation behind CI's ``bench-smoke``
+gate: saturated + staggered regimes comparing plain HeRo, stage
+coalescing only, and coalescing + continuous decode batching, reporting
+throughput and p50/p99 per-query latency (``--bench-out`` writes the
+JSON artifact the regression gate diffs against its committed baseline).
 """
 from __future__ import annotations
 
@@ -74,45 +74,109 @@ def run(csv=print, k: int = 3, wf: int = 2, dataset: str = "hotpotqa",
     return seq, merged
 
 
-def run_saturated(csv=print, k: int = 8, wf: int = 1,
-                  dataset: str = "hotpotqa", world: str = "sd8gen4",
-                  inter_arrival: float = 0.25):
-    """Coalescing ablation under saturating arrivals (k queries, one every
-    ``inter_arrival`` s — far below the per-query service time, so the
-    ready sets of different queries overlap at every scheduling point)."""
-    traces = sample_traces(dataset, k, seed=11)
-    means = default_means(traces)
+# serving scheduler variants: plain HeRo, stage coalescing only (the PR 2
+# lever), and coalescing + continuous decode batching (the full serving mode)
+VARIANTS = (
+    ("hero", dict(coalesce=False)),
+    ("hero+coalesce", dict(coalesce=True,
+                           cfg_overrides={"decode_batch": False})),
+    ("hero+decode_batch", dict(coalesce=True)),
+)
+
+
+def _variant_metrics(world, means, traces, wf, inter_arrival, kw) -> dict:
+    k = len(traces)
+    sess = HeroSession(world=world, family="qwen3", strategy="hero",
+                       means=means, **kw)
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=wf, arrival_time=qi * inter_arrival)
+    res = sess.run()
+    lats = np.array([r.makespan for r in res])
+    total = float(max(r.finish_time for r in res))
+    return {"total": total, "throughput": k / total,
+            "p50": float(np.percentile(lats, 50)),
+            "p99": float(np.percentile(lats, 99)),
+            "coalesced": int(sum(r.coalesced_nodes for r in res)),
+            "decode_rounds": int(sum(r.decode_rounds for r in res))}
+
+
+# the two regimes the bench-smoke CI gate tracks: saturating arrivals (the
+# continuous-batching stress case — queries arrive far below the per-query
+# service time, so ready sets overlap at every scheduling point) and a
+# wider staggered grid (the continuous-admission case); both on the sim
+# backend so CI is deterministic
+SERVING_REGIMES = {
+    "saturated": dict(k=8, wf=1, inter_arrival=0.25),
+    "staggered": dict(k=8, wf=1, inter_arrival=2.0),
+}
+
+
+def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
+                    csv=print) -> dict:
+    """The serving benchmark behind CI's ``bench-smoke`` gate: every
+    (regime, scheduler-variant) cell with p50/p99/makespan/throughput."""
     out = {}
-    csv("world,scheduler,queries,total_s,throughput_qps,p50_s,p99_s,"
-        "coalesced_nodes")
-    for label, coalesce in (("hero", False), ("hero+coalesce", True)):
-        sess = HeroSession(world=world, family="qwen3", strategy="hero",
-                           means=means, coalesce=coalesce)
-        for qi, tr in enumerate(traces):
-            sess.submit(tr, wf=wf, arrival_time=qi * inter_arrival)
-        res = sess.run()
-        lats = np.array([r.makespan for r in res])
-        total = float(max(r.finish_time for r in res))
-        out[label] = {"total": total, "throughput": k / total,
-                      "p50": float(np.percentile(lats, 50)),
-                      "p99": float(np.percentile(lats, 99)),
-                      "coalesced": sum(r.coalesced_nodes for r in res)}
-        row = out[label]
-        csv(f"{world},{label},{k},{total:.2f},{row['throughput']:.3f},"
-            f"{row['p50']:.2f},{row['p99']:.2f},{row['coalesced']}")
-    gain = out["hero+coalesce"]["throughput"] / out["hero"]["throughput"]
-    csv(f"# {world}: coalescing throughput gain {gain:.2f}x at k={k}, "
-        f"p99 {out['hero']['p99']:.2f}s -> {out['hero+coalesce']['p99']:.2f}s")
+    for regime, cfg in SERVING_REGIMES.items():
+        traces = sample_traces(dataset, cfg["k"], seed=11)
+        means = default_means(traces)
+        cells = out[regime] = {}
+        csv(f"# regime={regime} (k={cfg['k']}, wf=w{cfg['wf']}, "
+            f"inter_arrival={cfg['inter_arrival']}s)")
+        csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
+            "decode_rounds")
+        for label, kw in VARIANTS:
+            row = cells[label] = _variant_metrics(
+                world, means, traces, cfg["wf"], cfg["inter_arrival"], kw)
+            csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
+                f"{row['p99']:.2f},{row['throughput']:.3f},"
+                f"{row['decode_rounds']}")
+        gain = (cells["hero+decode_batch"]["throughput"]
+                / cells["hero"]["throughput"])
+        csv(f"# {world}/{regime}: serving throughput gain {gain:.2f}x, p99 "
+            f"{cells['hero']['p99']:.2f}s -> "
+            f"{cells['hero+decode_batch']['p99']:.2f}s")
     return out
 
 
-def run_all(csv=print, **kw):
+def write_serving_bench(path: str, world: str = "sd8gen4",
+                        dataset: str = "hotpotqa", csv=print) -> dict:
+    """Run :func:`serving_metrics` and write the BENCH_serving.json
+    artifact the CI regression gate compares against its committed
+    baseline."""
+    import json
+
+    blob = {"world": world, "dataset": dataset,
+            "regimes": serving_metrics(world, dataset, csv=csv)}
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+    csv(f"# wrote {path}")
+    return blob
+
+
+def run_admission(csv=print, **kw):
+    """The admission-regime comparison alone (no serving ablation) — what
+    ``benchmarks/run.py``'s MultiQuery section runs; the serving cells live
+    in their own section so the saturated sweep is never paid twice."""
     run(csv)                            # mobile SoC: saturated by one query
-    run_saturated(csv)                  # coalescing pays once queries pile up
     return run(csv, world="tpu_pod", k=6)   # pod slices: concurrency pays
 
 
+def run_all(csv=print, **kw):
+    out = run_admission(csv)
+    serving_metrics(csv=csv)            # batching pays once queries pile up
+    return out
+
+
 def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench-out", metavar="PATH",
+                    help="write the BENCH_serving.json artifact for the CI "
+                         "perf gate instead of running the full comparison")
+    args = ap.parse_args()
+    if args.bench_out:
+        write_serving_bench(args.bench_out)
+        return
     run_all()
 
 

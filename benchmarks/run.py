@@ -1,9 +1,19 @@
 """Benchmark driver — one section per paper table/figure.
-Prints ``name,us_per_call,derived``-style CSV blocks per section."""
+Prints ``name,us_per_call,derived``-style CSV blocks per section.
+
+    python benchmarks/run.py --list          # enumerate sections
+    python benchmarks/run.py --only Serving  # run matching sections only
+    python benchmarks/run.py --quick         # reduced sweeps
+"""
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# make ``python benchmarks/run.py`` work from a checkout: the script's dir
+# is on sys.path but the ``benchmarks`` package root (repo root) is not
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def session_facade(csv=print):
@@ -24,10 +34,21 @@ def session_facade(csv=print):
 
 
 def main() -> None:
+    import argparse
+
     from benchmarks import (fig2_affinity, fig3_contention, fig5_qwen3,
                             fig6_bge, grid_search, kernels_bench,
                             multiquery, roofline, table3_ablation)
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps for the big sections")
+    ap.add_argument("--list", action="store_true",
+                    help="print section names and exit")
+    ap.add_argument("--only", metavar="SUBSTR",
+                    help="run only sections whose name contains SUBSTR "
+                         "(case-insensitive)")
+    args = ap.parse_args()
+    quick = args.quick
     sections = [
         ("SessionFacade_sim_live (api)", session_facade, {}),
         ("Fig2_affinity_shape_sensitivity", fig2_affinity.run, {}),
@@ -40,11 +61,21 @@ def main() -> None:
          {"n": 2} if quick else {}),
         ("GridSearch_alpha_beta (paper §5)", grid_search.run,
          {"n": 2} if quick else {}),
-        ("MultiQuery_throughput (beyond-paper)", multiquery.run_all, {}),
+        ("MultiQuery_throughput (beyond-paper)", multiquery.run_admission,
+         {}),
+        ("Serving_continuous_batching (bench-smoke gate)",
+         multiquery.serving_metrics, {}),
         ("Kernel_microbench", kernels_bench.run, {}),
         ("Roofline_from_dryrun", roofline.run, {}),
     ]
+    if args.list:
+        for name, _, _ in sections:
+            print(name)
+        return
+    only = args.only.lower() if args.only else None
     for name, fn, kwargs in sections:
+        if only is not None and only not in name.lower():
+            continue
         print(f"\n=== {name} ===")
         t0 = time.time()
         fn(**kwargs)

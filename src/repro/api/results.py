@@ -29,6 +29,9 @@ class QueryResult:
     n_nodes: int = 0
     # nodes of this query that ran inside a cross-query fused dispatch
     coalesced_nodes: int = 0
+    # token-group rounds this query's decode streams spent resident in a
+    # continuous cross-query decode batch
+    decode_rounds: int = 0
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -48,7 +51,7 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         stage_latency: Dict[str, float] = {}
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
-        coalesced = 0
+        coalesced = rounds = 0
         for n in nodes:
             if n.status != "done" or n.start < 0:
                 continue
@@ -59,8 +62,22 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             share = n.payload.get("fused_share", 1.0)
             if "coalesced" in n.payload:
                 coalesced += 1
+            rounds += n.payload.get("decode_rounds", 0)
             stage_latency[n.stage] = stage_latency.get(n.stage, 0.0) + dur
-            if n.config is not None:
+            acc = n.payload.get("pu_busy_acc")
+            if acc is not None:
+                # continuous-batching member: PU occupancy accrued per
+                # round by live membership share, not wall duration (the
+                # stream idles between boundaries while others are served)
+                for pu, v in acc.items():
+                    pu_busy[pu] = pu_busy.get(pu, 0.0) + v
+                if (not n.payload.get("round_final")
+                        and n.config is not None):
+                    # left the resident batch and finished on a solo
+                    # dispatch: charge that final stint by wall time
+                    pu_busy[n.config[0]] = (pu_busy.get(n.config[0], 0.0)
+                                            + dur * share)
+            elif n.config is not None:
                 pu_busy[n.config[0]] = (pu_busy.get(n.config[0], 0.0)
                                         + dur * share)
             finish = max(finish, n.finish)
@@ -79,7 +96,7 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             makespan=finish - h.arrival_time, stage_latency=stage_latency,
             pu_busy=pu_busy, dispatches=dispatches,
             redispatches=redispatches, n_nodes=len(nodes),
-            coalesced_nodes=coalesced)
+            coalesced_nodes=coalesced, decode_rounds=rounds)
         h.result = res
         out.append(res)
     return out

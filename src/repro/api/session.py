@@ -265,18 +265,24 @@ class HeroSession:
         routed.sort(key=lambda h: -len(h.prefix))
 
         def observer(t: float, event: str, node: Node):
-            if event != "done" or node.stage == ADMIT_STAGE:
+            # "done": a node (or solo decode piece) finished; "tokens": a
+            # resident continuous-batching member advanced one token group
+            # at a decode-round boundary without finishing
+            if event not in ("done", "tokens") or node.stage == ADMIT_STAGE:
                 return
             for h in routed:
                 if not node.id.startswith(h.prefix):
                     continue
-                if h.on_stage_done is not None:
+                if event == "done" and h.on_stage_done is not None:
                     h.on_stage_done(h, node, t)
                 if (h.on_token is not None and node.kind == "stream_decode"
                         and node.template == h.spec.final_decode()):
                     # one callback per finished token group (sub-stage
-                    # partitioning makes this the streaming granularity)
-                    h.on_token(h, node.workload, t)
+                    # partitioning or decode-round boundaries make this the
+                    # streaming granularity)
+                    tokens = (node.payload["last_slice"] if event == "tokens"
+                              else node.workload)
+                    h.on_token(h, tokens, t)
                 break
 
         return observer

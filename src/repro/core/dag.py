@@ -106,7 +106,10 @@ class DynamicDAG:
         n = self.nodes[nid]
         n.status, n.finish = DONE, t
         members = n.payload.get("members")
-        if members:
+        if n.payload.get("decode_round"):
+            # continuous decode batching: one token-group boundary
+            self._finish_decode_round(n, t)
+        elif members:
             # coalesced dispatch: completion fans out to every member query
             total = max(n.workload, 1)
             for m in members:
@@ -122,6 +125,88 @@ class DynamicDAG:
             n.expander = None
         for s in self._succ.get(nid, ()):
             self._refresh_status(self.nodes[s])
+        if n.payload.get("decode_round") and not self._succ.get(nid):
+            # a completed round nobody depends on (progressive spawns may
+            # anchor on it) would otherwise accumulate one node per
+            # token-group boundary, making every scheduler pass scan an
+            # ever-growing graph in long-lived continuous serving
+            del self.nodes[nid]
+            self._succ.pop(nid, None)
+
+    # -- continuous decode batching ------------------------------------------
+    def fuse_decode(self, members: Sequence[Node]) -> Node:
+        """Fuse ≥ 2 READY ``stream_decode`` nodes into one *decode round* —
+        one token-group boundary of a resident continuous batch.  Unlike
+        ``fuse_ready``, the round does not consume its members whole: its
+        workload is the batch's remaining horizon (the scheduler trims it to
+        the chosen token group at dispatch) and ``mark_done`` advances every
+        member by its slice, releasing finished members immediately (leave)
+        while unfinished members rejoin the ready pool to re-fuse at the
+        next boundary — where newly READY decode streams join."""
+        assert len(members) >= 2
+        stage = members[0].stage
+        for m in members:
+            assert m.status == READY, (m.id, m.status)
+            assert m.kind == "stream_decode", m.id
+            assert m.stage == stage, m.id
+        fused = Node(id=self.fresh_id(f"dround:{stage}"), stage=stage,
+                     kind="stream_decode",
+                     workload=max(m.workload for m in members),
+                     payload={"members": list(members), "decode_round": True,
+                              "decode_width": len(members)})
+        # KV caches of a resident batch live on the PU that served the
+        # previous round; the scheduler charges migration when moving
+        prev_pus = {m.payload.get("batch_pu") for m in members} - {None}
+        if len(prev_pus) == 1:
+            fused.payload["prefer_pu"] = next(iter(prev_pus))
+        for m in members:
+            m.status = RUNNING
+            m.payload["fused_into"] = fused.id
+            m.payload.setdefault(
+                "decode_total", m.payload.get("decode_served", 0) + m.workload)
+        self.add(fused)
+        fused.criticality = max(m.criticality for m in members)
+        return fused
+
+    def _finish_decode_round(self, n: Node, t: float):
+        """Boundary-quantized fan-out: each member advances by
+        ``min(round group, remaining)`` tokens.  Finished members *leave*
+        (marked done — successors release, expanders run — the per-member
+        early release); the rest return to READY with the served tokens
+        subtracted, carrying their progressive-release callbacks."""
+        g = max(n.workload, 1)
+        members = n.payload["members"]
+        dur = (t - n.start) if n.start >= 0 else 0.0
+        total = sum(min(g, m.workload) for m in members)
+        for m in members:
+            s = min(g, m.workload)
+            m.payload.pop("fused_into", None)
+            m.payload["coalesced"] = n.id
+            m.payload["last_slice"] = s
+            m.payload["decode_rounds"] = m.payload.get("decode_rounds", 0) + 1
+            m.payload["decode_served"] = m.payload.get("decode_served", 0) + s
+            if n.config is not None:
+                # PU occupancy charged by live membership: workload share of
+                # this round's residency
+                acc = m.payload.setdefault("pu_busy_acc", {})
+                acc[n.config[0]] = (acc.get(n.config[0], 0.0)
+                                    + dur * (s / max(total, 1)))
+                m.payload["batch_pu"] = n.config[0]
+            if m.start < 0:
+                m.start = n.start       # joined the resident batch here
+            prog = m.payload.get("on_progress")
+            if s >= m.workload:
+                m.config = m.config if m.config is not None else n.config
+                m.payload["round_final"] = True
+                self.mark_done(m.id, t)
+                if prog is not None:
+                    prog(self, m, s)
+            else:
+                m.workload -= s
+                m.status = READY
+                if prog is not None:
+                    # spawned work may depend on the (done) round node
+                    prog(self, n, s)
 
     # -- cross-query coalescing ----------------------------------------------
     def fuse_ready(self, members: Sequence[Node]) -> Node:

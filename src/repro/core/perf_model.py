@@ -188,6 +188,9 @@ class Config:
     """One scheduling configuration c ∈ C_v: target PU + workload shape."""
     pu: str
     batch: int                  # items (batchable) or token-group size (stream)
+    # decode only: number of sequences resident in the dispatch (continuous
+    # cross-query batching).  1 = the paper's single-stream decode.
+    width: int = 1
 
 
 def _shape_eff(pu: PU, batch: int) -> float:
@@ -238,10 +241,16 @@ class GroundTruthPerf:
                     by / pu.mem_bw)
             return t + pu.overhead
         if stage.kind == "stream_decode":
-            # token-group of size n: memory-bound weight sweep per token
+            # token-group of size n: memory-bound weight sweep per token.
+            # At width w > 1 (continuous cross-query batching) the per-step
+            # weight sweep is SHARED by all w resident sequences — the
+            # vLLM/RAGDoll serving lever — while compute scales with w and
+            # pays the width tiling efficiency.
+            w = max(c.width, 1)
             by = stage.params * stage.bytes_per_param * n
-            fl = stage.flops(1, n)
-            t = max(fl / (pu.peak_flops * pu.eff_stream),
+            fl = stage.flops(1, n) * w
+            weff = _shape_eff(pu, w) if w > 1 else 1.0
+            t = max(fl / (pu.peak_flops * pu.eff_stream * weff),
                     by / (pu.mem_bw * pu.mem_eff_stream))
             return t + pu.overhead + pu.step_overhead * n
         if stage.kind == "search":
@@ -297,6 +306,15 @@ class LinearPerfModel:
         self.bw_coef: Dict[Tuple[str, str], np.ndarray] = {}
         self.phi_coef: Dict[str, np.ndarray] = {}
         self.table: Dict[Tuple[str, str], Dict[int, Tuple[float, float]]] = {}
+        # batched-decode profile: (stage, pu) -> {(width, group): (p0, bw)}
+        # plus a log-space regression for off-grid (width, group) shapes —
+        # what Eq. 3 enumerates over the *current* width of a resident
+        # continuous-batching decode group
+        self.decode_table: Dict[Tuple[str, str],
+                                Dict[Tuple[int, int],
+                                     Tuple[float, float]]] = {}
+        self.decode_coef: Dict[Tuple[str, str], np.ndarray] = {}
+        self.decode_bw_coef: Dict[Tuple[str, str], np.ndarray] = {}
 
     @staticmethod
     def _feats(n: np.ndarray, tile: int) -> np.ndarray:
@@ -307,6 +325,17 @@ class LinearPerfModel:
         frac = (n % tile) / max(tile, 1)
         ln = np.log(np.maximum(n, 1.0))
         return np.stack([np.ones_like(n), ln, ln * ln, frac], axis=-1)
+
+    @staticmethod
+    def _dfeats(w: np.ndarray, g: np.ndarray, tile: int) -> np.ndarray:
+        """Features for the batched-decode fit over (width, token group)."""
+        w = np.asarray(w, dtype=np.float64)
+        g = np.asarray(g, dtype=np.float64)
+        lw = np.log(np.maximum(w, 1.0))
+        lg = np.log(np.maximum(g, 1.0))
+        frac = (w % tile) / max(tile, 1)
+        return np.stack([np.ones_like(w), lw, lg, lw * lg, lw * lw, frac],
+                        axis=-1)
 
     def fit(self, gt: GroundTruthPerf,
             batch_grid: Sequence[int] = (1, 2, 4, 8, 16, 24, 32, 48, 64, 96,
@@ -337,6 +366,8 @@ class LinearPerfModel:
                     X, np.log(np.maximum(ys, 1e-9)), rcond=None)[0]
                 self.bw_coef[(sname, pu.name)] = np.linalg.lstsq(
                     X, np.log(np.maximum(bs, 1e-3)), rcond=None)[0]
+                if stage.kind == "stream_decode":
+                    self._fit_decode(gt, sname, stage, pu, rng, noise)
             # φ: quadratic fit in B/B0 above the knee
             Bs = np.linspace(0, 1.6 * gt.soc.dram_bw, 24)
             phis = np.array([gt.phi(stage, B) for B in Bs])
@@ -346,6 +377,36 @@ class LinearPerfModel:
         self._tiles = {pu.name: pu.tile for pu in gt.soc.pus}
         self._b0 = gt.soc.dram_bw
         return self
+
+    # decode-batching profile grid: widths × token groups (width 1 lives in
+    # the ordinary table; the scheduler's group candidates are clipped to
+    # the stream's remaining horizon, so off-grid shapes hit the regression)
+    DECODE_WIDTHS = (2, 3, 4, 6, 8)
+    DECODE_GROUPS = (4, 8, 16, 24, 32, 48, 64)
+
+    def _fit_decode(self, gt: GroundTruthPerf, sname: str, stage, pu,
+                    rng, noise: float) -> None:
+        tab: Dict[Tuple[int, int], Tuple[float, float]] = {}
+        ws, gs, ys, bs = [], [], [], []
+        for w in self.DECODE_WIDTHS:
+            for g in self.DECODE_GROUPS:
+                c = Config(pu.name, int(g), width=int(w))
+                y = gt.p0(stage, pu, c)
+                b = gt.bandwidth(stage, pu, c)
+                if noise:
+                    y *= float(1 + rng.normal(0, noise))
+                    b *= float(1 + rng.normal(0, noise))
+                tab[(int(w), int(g))] = (y, b)
+                ws.append(w)
+                gs.append(g)
+                ys.append(y)
+                bs.append(b)
+        self.decode_table[(sname, pu.name)] = tab
+        X = self._dfeats(np.array(ws), np.array(gs), pu.tile)
+        self.decode_coef[(sname, pu.name)] = np.linalg.lstsq(
+            X, np.log(np.maximum(ys, 1e-9)), rcond=None)[0]
+        self.decode_bw_coef[(sname, pu.name)] = np.linalg.lstsq(
+            X, np.log(np.maximum(bs, 1e-3)), rcond=None)[0]
 
     def supported(self, stage: str, pu: str) -> bool:
         return (stage, pu) in self.coef
@@ -361,6 +422,13 @@ class LinearPerfModel:
             "phi_coef": {s: c.tolist() for s, c in self.phi_coef.items()},
             "table": {f"{s}|{p}": {str(n): v for n, v in tab.items()}
                       for (s, p), tab in self.table.items()},
+            "decode_coef": {f"{s}|{p}": c.tolist() for (s, p), c in
+                            self.decode_coef.items()},
+            "decode_bw_coef": {f"{s}|{p}": c.tolist() for (s, p), c in
+                               self.decode_bw_coef.items()},
+            "decode_table": {f"{s}|{p}": {f"{w},{g}": v
+                                          for (w, g), v in tab.items()}
+                             for (s, p), tab in self.decode_table.items()},
             "tiles": self._tiles, "b0": self._b0,
         }
         with open(path, "w") as f:
@@ -380,6 +448,16 @@ class LinearPerfModel:
         m.table = {tuple(k.split("|")): {int(n): tuple(v)
                                          for n, v in tab.items()}
                    for k, tab in blob["table"].items()}
+        # decode-batching profile (absent in pre-serving profile files)
+        m.decode_coef = {tuple(k.split("|")): np.array(v)
+                         for k, v in blob.get("decode_coef", {}).items()}
+        m.decode_bw_coef = {tuple(k.split("|")): np.array(v)
+                            for k, v in blob.get("decode_bw_coef",
+                                                 {}).items()}
+        m.decode_table = {
+            tuple(k.split("|")): {tuple(int(x) for x in wg.split(",")):
+                                  tuple(v) for wg, v in tab.items()}
+            for k, tab in blob.get("decode_table", {}).items()}
         m._tiles = blob["tiles"]
         m._b0 = blob["b0"]
         return m
@@ -397,6 +475,42 @@ class LinearPerfModel:
             return hit[1]
         X = self._feats(np.array([batch]), self._tiles[pu])
         return float(np.exp((X @ self.bw_coef[(stage, pu)])[0]))
+
+    def p0_decode(self, stage: str, pu: str, width: int, group: int) -> float:
+        """Base latency of one token-group pass of a width-``width`` resident
+        decode batch (continuous cross-query batching).  width 1 degrades to
+        the ordinary stream profile."""
+        if width <= 1:
+            return self.p0(stage, pu, group)
+        hit = self.decode_table.get((stage, pu), {}).get((int(width),
+                                                          int(group)))
+        if hit is not None:
+            return hit[0]
+        if (stage, pu) not in self.decode_coef:
+            # profile saved before the decode-batching grid existed: decode
+            # is memory-bound on the per-step weight sweep, so the
+            # single-stream pass cost is the first-order width-w estimate
+            return self.p0(stage, pu, group)
+        X = self._dfeats(np.array([width]), np.array([group]),
+                         self._tiles[pu])
+        return float(np.exp((X @ self.decode_coef[(stage, pu)])[0]))
+
+    def bandwidth_decode(self, stage: str, pu: str, width: int,
+                         group: int) -> float:
+        """Shared-domain demand of a batched decode pass: the weight sweep is
+        read once per step regardless of width, so per-sequence pressure
+        drops as the batch widens."""
+        if width <= 1:
+            return self.bandwidth(stage, pu, group)
+        hit = self.decode_table.get((stage, pu), {}).get((int(width),
+                                                          int(group)))
+        if hit is not None:
+            return hit[1]
+        if (stage, pu) not in self.decode_bw_coef:
+            return self.bandwidth(stage, pu, group)   # pre-serving profile
+        X = self._dfeats(np.array([width]), np.array([group]),
+                         self._tiles[pu])
+        return float(np.exp((X @ self.decode_bw_coef[(stage, pu)])[0]))
 
     def phi(self, stage: str, B: float) -> float:
         """Monotone projection of the fitted quadratic: a convex parabola is

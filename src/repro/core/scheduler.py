@@ -55,6 +55,16 @@ class SchedulerConfig:
     # max total workload absorbed into one fused dispatch: bounds how long
     # a single dispatch can occupy a PU (tail-latency fairness)
     coalesce_window: int = 512
+    # continuous decode batching (vLLM/RAGDoll-style): stream_decode nodes
+    # of different admitted queries share a resident per-(stage, PU) batch
+    # at token-group granularity, with join/leave at group boundaries.
+    # Effective only under ``coalesce`` (the multi-query serving mode).
+    decode_batch: bool = True
+    # max resident sequences per decode batch (profiled width grid top)
+    decode_batch_cap: int = 8
+    # seconds charged when a resident batch's next round moves PU (KV-cache
+    # migration); keeps batches sticky per (stage, PU) unless moving wins
+    decode_migrate_cost: float = 0.01
 
 
 @dataclass
@@ -168,11 +178,20 @@ class HeroScheduler:
 
             best: Optional[Tuple[float, Dispatch, bool]] = None
             capable = self._capable_pus(v_cand, idle + list(busy_until))
+            # resident decode batch: Eq. 3 enumerates configs at the batch's
+            # *current* width, and moving PU pays the KV-migration cost
+            width = (v_cand.payload.get("decode_width", 1)
+                     if v_cand.payload.get("decode_round") else 1)
+            prefer_pu = v_cand.payload.get("prefer_pu")
             for pu in capable:                                  # line 9
                 is_idle = pu in idle
                 start = now if is_idle else max(now, busy_until[pu])
                 for batch in self._configs(v_cand, pu):         # line 10
-                    b = self.perf.bandwidth(v_cand.stage, pu, batch)
+                    if width > 1:
+                        b = self.perf.bandwidth_decode(v_cand.stage, pu,
+                                                       width, batch)
+                    else:
+                        b = self.perf.bandwidth(v_cand.stage, pu, batch)
                     b_active = B_now + sum(x.bandwidth for x in decisions)
                     if is_idle and cfgn.enable_concurrency and \
                             b_active > 0 and cc.violates_budget(
@@ -180,7 +199,11 @@ class HeroScheduler:
                         # (gate only actual *concurrency*: a lone stage may
                         # exceed B_soft — waiting cannot help it)
                         continue
-                    p0 = self.perf.p0(v_cand.stage, pu, batch)
+                    if width > 1:
+                        p0 = self.perf.p0_decode(v_cand.stage, pu, width,
+                                                 batch)
+                    else:
+                        p0 = self.perf.p0(v_cand.stage, pu, batch)
                     phi = self.perf.phi(v_cand.stage, B_now + b)
                     passes = ceil_passes(v_cand.workload, batch)
                     f_cand = start + passes * p0 * phi          # line 12 (Eq. 2)
@@ -188,6 +211,8 @@ class HeroScheduler:
                         self.perf, gate_star, b, B_now, now
                     ) if (cfgn.enable_concurrency and is_idle) else 0.0
                     score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
+                    if width > 1 and prefer_pu is not None and pu != prefer_pu:
+                        score += cfgn.decode_migrate_cost
                     d = Dispatch(v_cand, pu, batch, p0, b)
                     if best is None or score < best[0]:
                         best = (score, d, is_idle)
@@ -229,6 +254,12 @@ class HeroScheduler:
             if f.status == "ready":       # never dispatched: dissolve so
                 dag.unfuse(f)             # members stay schedulable
                 self._fifo_seq.pop(f.id, None)
+            elif f.payload.get("decode_round"):
+                # dispatched rounds never consult the FIFO again, and one
+                # fresh id is minted per token-group boundary — keeping
+                # them would leak an entry per boundary in long-lived
+                # continuous serving
+                self._fifo_seq.pop(f.id, None)
         return decisions
 
     # -- cross-query coalescing ----------------------------------------------
@@ -245,32 +276,45 @@ class HeroScheduler:
         Alg. 1 machinery: ``shape_aware_configs`` enumerates tile-aligned
         merged configs (capped at ``coalesce_cap``) and the Eq. 5 gate
         prunes them like any other candidate.  Fusions that do not
-        dispatch this pass are dissolved before returning."""
+        dispatch this pass are dissolved before returning.
+
+        With ``decode_batch``, READY ``stream_decode`` nodes group the same
+        way into *decode rounds* (continuous batching): each round serves
+        one token group per resident stream, so membership is re-derived at
+        every boundary — unfinished members return READY and re-fuse here,
+        newly READY streams join, finished ones have already left."""
         cfgn = self.cfg
         groups: Dict[Tuple[str, str], List[Node]] = {}
         for n in dag.ready():
-            if (n.kind != "batchable" or "members" in n.payload
-                    or n.payload.get("no_coalesce")):
+            if ("members" in n.payload or n.payload.get("no_coalesce")):
                 continue
-            groups.setdefault((n.stage, n.kind), []).append(n)
+            if n.kind == "batchable" or (n.kind == "stream_decode"
+                                         and cfgn.decode_batch):
+                groups.setdefault((n.stage, n.kind), []).append(n)
         created: List[Node] = []
-        for nodes in groups.values():
+        for (_, kind), nodes in groups.items():
             if len({self._query_key(n.id) for n in nodes}) < 2:
                 continue                   # cross-query only
             # most critical members first; the window bounds PU occupancy.
             # Oversized nodes are skipped (they dispatch solo) rather than
             # blocking fusion of the smaller nodes behind them.
             nodes.sort(key=lambda n: -n.criticality)
-            take: List[Node] = []
-            total = 0
-            for n in nodes:
-                if total + n.workload > cfgn.coalesce_window:
+            if kind == "stream_decode":
+                take = nodes[:cfgn.decode_batch_cap]
+                if len({self._query_key(n.id) for n in take}) < 2:
                     continue
-                take.append(n)
-                total += n.workload
-            if len({self._query_key(n.id) for n in take}) < 2:
-                continue
-            fused = dag.fuse_ready(take)
+                fused = dag.fuse_decode(take)
+            else:
+                take = []
+                total = 0
+                for n in nodes:
+                    if total + n.workload > cfgn.coalesce_window:
+                        continue
+                    take.append(n)
+                    total += n.workload
+                if len({self._query_key(n.id) for n in take}) < 2:
+                    continue
+                fused = dag.fuse_ready(take)
             self._fifo_seq[fused.id] = min(
                 self._fifo_seq.get(n.id, self._seq) for n in take)
             created.append(fused)
@@ -290,6 +334,14 @@ class HeroScheduler:
     def _configs(self, node: Node, pu: str) -> List[int]:
         if node.kind == "io":
             return [max(node.workload, 1)]
+        if node.payload.get("decode_round"):
+            # one boundary per dispatch: token-group candidates, clipped to
+            # the batch's remaining horizon (the dispatch trims to the
+            # chosen group; unfinished members re-enter at the boundary)
+            return shape_aware_configs(self.perf, node, pu,
+                                       token_groups=(self.cfg.token_group,
+                                                     self.cfg.token_group * 2,
+                                                     self.cfg.token_group * 4))
         if "members" in node.payload:
             # fused dispatch: coalescing IS a batching decision, so merged
             # shape configs are enumerated even with partitioning ablated
@@ -308,6 +360,12 @@ class HeroScheduler:
         Partitioning is recomputed on the remaining workload at the next
         dispatch (paper §4.2)."""
         L = node.workload
+        if node.payload.get("decode_round"):
+            # decode rounds serve exactly one token group per member; the
+            # remainder stays IN the member streams, which rejoin the pool
+            # at the boundary (continuous batching — no rest sibling)
+            node.workload = min(L, n)
+            return node
         if "members" in node.payload:
             return node    # fused dispatches run whole (membership is fixed)
         if not self.cfg.enable_partition or n >= L or node.kind in (
@@ -317,6 +375,10 @@ class HeroScheduler:
                     kind=node.kind, workload=L - n,
                     deps=set(node.deps), template=node.template,
                     group=node.group or node.id, payload=dict(node.payload))
+        for k in ("pu_busy_acc", "decode_served", "decode_total",
+                  "decode_rounds", "last_slice", "coalesced", "batch_pu",
+                  "round_final"):
+            rest.payload.pop(k, None)   # batch accounting is per-node
         node.workload = n
         node.group = node.group or node.id
         succ = list(dag.successors(node.id))

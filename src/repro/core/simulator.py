@@ -75,9 +75,15 @@ class Simulator:
             self.observer(t, event, node)
         # a fused (cross-query coalesced) dispatch is every member's
         # lifecycle event too: per-query timelines and streaming callbacks
-        # see member ids, not the synthetic fused id
+        # see member ids, not the synthetic fused id.  A decode-round
+        # boundary is "done" only for members that left; residents that
+        # merely advanced emit a token-group "tokens" event instead.
+        is_round = bool(node.payload.get("decode_round"))
         for m in node.payload.get("members", ()):
-            self._note(timeline, t, event, m)
+            ev = event
+            if is_round and event == "done" and m.status != "done":
+                ev = "tokens"
+            self._note(timeline, t, ev, m)
 
     # -- main loop -----------------------------------------------------------
     def run(self, dag: DynamicDAG, max_time: float = 3600.0) -> SimResult:
@@ -189,7 +195,11 @@ class Simulator:
         # io-kind nodes (web calls, admission timers) need no stage model
         stage = self.gt.stages.get(d.node.stage)
         pu = self.gt.soc.pu(d.pu) if d.pu != "io" else None
-        c = Config(d.pu, d.batch)
+        # resident decode batches execute at their current width: the
+        # ground truth shares the per-step weight sweep across members
+        c = Config(d.pu, d.batch,
+                   width=(d.node.payload.get("decode_width", 1)
+                          if d.node.payload.get("decode_round") else 1))
         if d.node.kind == "io":
             # the scheduler's io prediction (0.35 s round trip, or the
             # remaining admission delay for arrival-timer nodes)

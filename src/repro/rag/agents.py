@@ -52,6 +52,35 @@ class LMAgent:
             out.append(tok)
         return GenResult(out, len(out))
 
+    def generate_batch(self, prompts: Sequence[Sequence[int]],
+                       max_new: int = 32) -> List[GenResult]:
+        """One batched prefill + stepwise decode over ``len(prompts)``
+        concurrent streams — the continuous-batching serving path: a fused
+        decode dispatch runs a single width-B JAX call per token step
+        instead of B sequential single-stream loops.  The model applies no
+        padding mask, so ragged prompts are LEFT-CROPPED to the shortest
+        length (keeping each stream's most recent context) rather than
+        padded — pad tokens would leak into attention at real positions."""
+        B = len(prompts)
+        if B == 1:
+            return [self.generate(prompts[0], max_new, stop_at_eos=False)]
+        assert all(len(p) > 0 for p in prompts), "empty prompt in batch"
+        width = min(len(p) for p in prompts)
+        cropped = [list(p)[-width:] for p in prompts]
+        tokens = jnp.asarray(cropped, jnp.int32)
+        cache = self.model.init_cache(B, self.max_len)
+        logits, cache = self.model.prefill(self.params,
+                                           {"tokens": tokens}, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)
+        outs = [[int(t)] for t in np.asarray(tok)]
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(
+                self.params, tok[:, None].astype(jnp.int32), cache)
+            tok = jnp.argmax(logits, axis=-1)
+            for seq, t in zip(outs, np.asarray(tok)):
+                seq.append(int(t))
+        return [GenResult(seq, len(seq)) for seq in outs]
+
 
 class QueryRewriter(LMAgent):
     """Emits n sub-queries; token groups release downstream retrieval early

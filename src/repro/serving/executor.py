@@ -115,9 +115,14 @@ class HeroRuntime:
             self.observer(t, event, node)
         # fused (cross-query coalesced) dispatches fan events out to their
         # members — same convention as the simulator, so per-query
-        # attribution is backend-independent
+        # attribution is backend-independent.  At a decode-round boundary,
+        # members still resident get a "tokens" event, not "done".
+        is_round = bool(node.payload.get("decode_round"))
         for m in node.payload.get("members", ()):
-            self._emit(t, event, m)
+            ev = event
+            if is_round and event == "done" and m.status != "done":
+                ev = "tokens"
+            self._emit(t, ev, m)
 
     def add_executor(self, name: str, ex: PUExecutor):
         self.executors[name] = ex
@@ -172,6 +177,12 @@ class HeroRuntime:
             if not inflight:
                 dispatch()
                 if not inflight and dag.unfinished():
+                    if any(x.busy() for x in self.executors.values()):
+                        # cancelled stragglers are non-preemptible: the PU
+                        # drains them off-book (not in inflight) and only
+                        # then frees up — waiting is progress, not deadlock
+                        time.sleep(poll)
+                        continue
                     raise RuntimeError(
                         f"deadlock: {[n.id for n in dag.unfinished()][:4]}")
             progressed = False
@@ -190,7 +201,19 @@ class HeroRuntime:
                             continue
                         raise RuntimeError(
                             f"stage {nid} failed:\n{task.error}")
-                    self.results[nid] = task.result
+                    if d.node.payload.get("decode_round"):
+                        # synthetic per-boundary id: storing under it would
+                        # leak one entry per round — fan a coalesce-aware
+                        # fn's {member id: result} dict out per query
+                        # instead (each member accumulates its rounds)
+                        per = (task.result
+                               if isinstance(task.result, dict) else {})
+                        for m in d.node.payload["members"]:
+                            if m.id in per:
+                                self.results.setdefault(m.id, []).append(
+                                    per[m.id])
+                    else:
+                        self.results[nid] = task.result
                     prog = d.node.payload.get("on_progress")
                     dag.mark_done(nid, now())
                     if prog is not None and d.node.kind == "stream_decode":

@@ -129,7 +129,8 @@ def test_coalesced_run_preserves_dependencies_and_workload(traces):
                           SchedulerConfig(coalesce=True))
     Simulator(gt, sched).run(dag)
     assert not dag.unfinished()
-    fused_nodes = [n for n in dag.nodes.values() if "members" in n.payload]
+    fused_nodes = [n for n in dag.nodes.values() if "members" in n.payload
+                   and not n.payload.get("decode_round")]
     assert fused_nodes, "no cross-query fusion happened on 4 merged queries"
     for n in dag.nodes.values():
         for d in n.deps:
@@ -140,6 +141,17 @@ def test_coalesced_run_preserves_dependencies_and_workload(traces):
         assert sum(m.payload["fused_share"] for m in members) \
             == pytest.approx(1.0)
         assert all(m.finish == f.finish for m in members)
+    # decode rounds (continuous batching) follow per-member serving
+    # invariants instead; completed rounds nobody depends on are pruned
+    # from the graph, so only member-side accounting remains
+    served = [n for n in dag.nodes.values()
+              if "decode_served" in n.payload]
+    assert served, "no continuous decode batching on 4 merged queries"
+    for m in served:
+        assert m.payload["decode_served"] <= m.payload["decode_total"]
+    assert not [n for n in dag.nodes.values()
+                if n.payload.get("decode_round") and n.status == "done"
+                and not dag._succ.get(n.id)]
 
 
 def test_sim_live_parity_with_coalesce(means):
@@ -156,7 +168,8 @@ def test_sim_live_parity_with_coalesce(means):
     for s, l in zip(by["sim"], by["live"]):
         assert s.qid == l.qid
         assert set(s.stage_latency) == set(l.stage_latency)
-        assert s.n_nodes == l.n_nodes
+        # node counts may differ under continuous decode batching (round
+        # boundaries land on sim vs wall clocks), but never by stages
         assert s.dispatches >= s.n_nodes
         assert l.dispatches >= l.n_nodes
     assert sum(r.coalesced_nodes for r in by["sim"]) > 0
