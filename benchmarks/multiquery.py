@@ -12,11 +12,18 @@ them.  Three admission regimes are compared:
                  admission — later queries join the running DAG via
                  arrival-gated timer nodes).
 
-``serving_metrics`` is the serving ablation behind CI's ``bench-smoke``
-gate: saturated + staggered regimes comparing plain HeRo, stage
-coalescing only, and coalescing + continuous decode batching, reporting
-throughput and p50/p99 per-query latency (``--bench-out`` writes the
-JSON artifact the regression gate diffs against its committed baseline).
+``serving_metrics`` is the serving benchmark behind CI's ``bench-smoke``
+matrix: three regimes (saturated / staggered W1, plus a ``mixed`` regime
+interleaving W1–W3 with an optional inter-arrival sweep) × the scheduler
+variants, reporting throughput, p50/p99 latency, and the batching
+policy's chosen decode widths / token groups per cell.  Each CI matrix
+leg runs ONE regime (``--regime``) and writes its own
+``BENCH_serving.json`` artifact, which ``check_regression.py`` diffs
+against the per-regime baseline under ``benchmarks/baselines/``.
+
+``serving_ablation`` is the Table-3-style CI leg: adaptive caps vs fixed
+caps vs batching off, failing (exit 1) if adaptive p99 regresses more
+than 5% against the fixed-cap scheduler on any regime.
 """
 from __future__ import annotations
 
@@ -75,82 +82,174 @@ def run(csv=print, k: int = 3, wf: int = 2, dataset: str = "hotpotqa",
 
 
 # serving scheduler variants: plain HeRo, stage coalescing only (the PR 2
-# lever), and coalescing + continuous decode batching (the full serving mode)
+# lever), coalescing + continuous decode batching under the PR 3 fixed
+# caps, and the full adaptive batching policy (caps/windows/groups
+# derived online from the profiled grids — the serving default)
 VARIANTS = (
     ("hero", dict(coalesce=False)),
     ("hero+coalesce", dict(coalesce=True,
                            cfg_overrides={"decode_batch": False})),
     ("hero+decode_batch", dict(coalesce=True)),
+    ("hero+adaptive", dict(coalesce=True, batch_policy="adaptive")),
 )
 
 
-def _variant_metrics(world, means, traces, wf, inter_arrival, kw) -> dict:
+def _hist(d: dict) -> str:
+    """``{16: 3, 4: 1}`` -> ``16:3|4:1`` (stable, CSV-safe)."""
+    return "|".join(f"{k}:{v}" for k, v in sorted(d.items())) or "-"
+
+
+def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
     k = len(traces)
     sess = HeroSession(world=world, family="qwen3", strategy="hero",
                        means=means, **kw)
     for qi, tr in enumerate(traces):
-        sess.submit(tr, wf=wf, arrival_time=qi * inter_arrival)
-    res = sess.run()
+        sess.submit(tr, wf=wfs[qi % len(wfs)], arrival_time=qi * inter_arrival)
+    res = sess.run(timeout=7200)
     lats = np.array([r.makespan for r in res])
-    total = float(max(r.finish_time for r in res))
-    return {"total": total, "throughput": k / total,
+    batching = sess.last_run.batching
+    return {"total": float(max(r.finish_time for r in res)),
+            "throughput": k / float(max(r.finish_time for r in res)),
             "p50": float(np.percentile(lats, 50)),
             "p99": float(np.percentile(lats, 99)),
             "coalesced": int(sum(r.coalesced_nodes for r in res)),
-            "decode_rounds": int(sum(r.decode_rounds for r in res))}
+            "decode_rounds": int(sum(r.decode_rounds for r in res)),
+            # chosen shapes per regime: the observable output of the
+            # batching policy (widths/groups the scheduler actually ran)
+            "decode_widths": dict(batching.get("decode_width", {})),
+            "decode_groups": dict(batching.get("decode_group", {}))}
 
 
-# the two regimes the bench-smoke CI gate tracks: saturating arrivals (the
-# continuous-batching stress case — queries arrive far below the per-query
-# service time, so ready sets overlap at every scheduling point) and a
-# wider staggered grid (the continuous-admission case); both on the sim
-# backend so CI is deterministic
+# the bench-smoke CI matrix: saturating W1 arrivals (the continuous-
+# batching stress case), a wider staggered W1 grid (continuous
+# admission), and a mixed regime interleaving W1-W3 — where no single
+# fixed cap suits every decode stage, the case the adaptive policy
+# exists for; all on the sim backend so CI is deterministic
 SERVING_REGIMES = {
-    "saturated": dict(k=8, wf=1, inter_arrival=0.25),
-    "staggered": dict(k=8, wf=1, inter_arrival=2.0),
+    "saturated": dict(k=8, wfs=(1,), inter_arrival=0.25),
+    "staggered": dict(k=8, wfs=(1,), inter_arrival=2.0),
+    "mixed": dict(k=9, wfs=(1, 2, 3), inter_arrival=0.5),
 }
+
+# the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
+# canonical mixed cell (0.5) is always present, the sweep adds the rest
+ARRIVAL_SWEEP = (1.0, 2.0)
 
 
 def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
-                    csv=print) -> dict:
-    """The serving benchmark behind CI's ``bench-smoke`` gate: every
-    (regime, scheduler-variant) cell with p50/p99/makespan/throughput."""
+                    csv=print, regimes=None, arrival_sweep: bool = False,
+                    variants=VARIANTS) -> dict:
+    """The serving benchmark behind CI's ``bench-smoke`` matrix: every
+    (regime, scheduler-variant) cell with p50/p99/makespan/throughput and
+    the chosen decode widths/groups.  ``regimes`` restricts to a subset
+    (one CI matrix leg = one regime); ``arrival_sweep`` adds
+    ``mixed@<ia>`` cells over :data:`ARRIVAL_SWEEP`; ``variants``
+    restricts the scheduler variants simulated (the ablation leg skips
+    the cells it never reads)."""
+    todo = []
+    for name, cfg in SERVING_REGIMES.items():
+        if regimes is not None and name not in regimes:
+            continue
+        todo.append((name, cfg))
+        if name == "mixed" and arrival_sweep:
+            for ia in ARRIVAL_SWEEP:
+                todo.append((f"mixed@{ia:g}", {**cfg, "inter_arrival": ia}))
     out = {}
-    for regime, cfg in SERVING_REGIMES.items():
+    for regime, cfg in todo:
         traces = sample_traces(dataset, cfg["k"], seed=11)
         means = default_means(traces)
         cells = out[regime] = {}
-        csv(f"# regime={regime} (k={cfg['k']}, wf=w{cfg['wf']}, "
+        wfs = cfg["wfs"]
+        csv(f"# regime={regime} (k={cfg['k']}, "
+            f"wf={'+'.join(f'w{w}' for w in wfs)}, "
             f"inter_arrival={cfg['inter_arrival']}s)")
         csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
-            "decode_rounds")
-        for label, kw in VARIANTS:
+            "decode_rounds,widths,groups")
+        for label, kw in variants:
             row = cells[label] = _variant_metrics(
-                world, means, traces, cfg["wf"], cfg["inter_arrival"], kw)
+                world, means, traces, wfs, cfg["inter_arrival"], kw)
             csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
-                f"{row['decode_rounds']}")
-        gain = (cells["hero+decode_batch"]["throughput"]
+                f"{row['decode_rounds']},{_hist(row['decode_widths'])},"
+                f"{_hist(row['decode_groups'])}")
+        if "hero+adaptive" not in cells or "hero" not in cells:
+            continue
+        gain = (cells["hero+adaptive"]["throughput"]
                 / cells["hero"]["throughput"])
-        csv(f"# {world}/{regime}: serving throughput gain {gain:.2f}x, p99 "
-            f"{cells['hero']['p99']:.2f}s -> "
-            f"{cells['hero+decode_batch']['p99']:.2f}s")
+        csv(f"# {world}/{regime}: adaptive serving throughput gain "
+            f"{gain:.2f}x, p99 {cells['hero']['p99']:.2f}s -> "
+            f"{cells['hero+adaptive']['p99']:.2f}s "
+            f"(fixed caps {cells['hero+decode_batch']['p99']:.2f}s)")
     return out
 
 
 def write_serving_bench(path: str, world: str = "sd8gen4",
-                        dataset: str = "hotpotqa", csv=print) -> dict:
+                        dataset: str = "hotpotqa", csv=print,
+                        regimes=None, arrival_sweep: bool = False) -> dict:
     """Run :func:`serving_metrics` and write the BENCH_serving.json
-    artifact the CI regression gate compares against its committed
-    baseline."""
+    artifact the CI regression gate compares against the per-regime
+    baseline under ``benchmarks/baselines/``."""
     import json
 
     blob = {"world": world, "dataset": dataset,
-            "regimes": serving_metrics(world, dataset, csv=csv)}
+            "regimes": serving_metrics(world, dataset, csv=csv,
+                                       regimes=regimes,
+                                       arrival_sweep=arrival_sweep)}
     with open(path, "w") as f:
         json.dump(blob, f, indent=1, sort_keys=True)
     csv(f"# wrote {path}")
     return blob
+
+
+# -- Table-3-style batching ablation (the CI ``serving-ablation`` leg) -----
+
+ABLATION_TOL = 0.05     # adaptive p99 may trail fixed caps by at most 5%
+
+
+def serving_ablation(csv=print, world: str = "sd8gen4",
+                     dataset: str = "hotpotqa", tol: float = ABLATION_TOL,
+                     strict: bool = True) -> dict:
+    """Adaptive caps vs fixed caps vs batching off, per regime.
+
+    The CI leg behind ``benchmarks/run.py --only serving-ablation``:
+    fails (SystemExit 1) when ``strict`` and the adaptive policy's p99
+    regresses more than ``tol`` against the fixed-cap scheduler on any
+    regime — the acceptance bar that keeps the derived caps honest
+    against the constants they replaced."""
+    ablated = tuple((label, kw) for label, kw in VARIANTS
+                    if label != "hero+coalesce")   # cells the gate reads
+    cells = serving_metrics(world, dataset, csv=lambda *_: None,
+                            variants=ablated)
+    csv("regime,scheduler,p99_s,p50_s,total_s,delta_vs_fixed")
+    violations = []
+    for regime, row in cells.items():
+        fixed = row["hero+decode_batch"]["p99"]
+        for label in ("hero", "hero+decode_batch", "hero+adaptive"):
+            p99 = row[label]["p99"]
+            delta = (p99 / fixed - 1.0) * 100.0
+            csv(f"{regime},{label},{p99:.2f},{row[label]['p50']:.2f},"
+                f"{row[label]['total']:.2f},{delta:+.1f}%")
+        adaptive = row["hero+adaptive"]["p99"]
+        if adaptive > fixed * (1.0 + tol):
+            violations.append(
+                f"{regime}: adaptive p99 {adaptive:.2f}s regresses "
+                f"{(adaptive / fixed - 1) * 100:.1f}% vs fixed-cap "
+                f"{fixed:.2f}s (> {tol * 100:.0f}% tolerance)")
+    mixed = cells.get("mixed")
+    if mixed and mixed["hero+adaptive"]["p99"] >= mixed["hero+decode_batch"]["p99"]:
+        violations.append(
+            "mixed: adaptive p99 no longer beats fixed caps "
+            f"({mixed['hero+adaptive']['p99']:.2f}s vs "
+            f"{mixed['hero+decode_batch']['p99']:.2f}s) — the regime the "
+            "adaptive policy exists for")
+    for v in violations:
+        csv(f"# ABLATION GATE: {v}")
+    if not violations:
+        csv("# ablation gate OK: adaptive caps hold against fixed caps "
+            f"on {len(cells)} regimes")
+    if violations and strict:
+        raise SystemExit(1)
+    return cells
 
 
 def run_admission(csv=print, **kw):
@@ -173,9 +272,25 @@ def main():
     ap.add_argument("--bench-out", metavar="PATH",
                     help="write the BENCH_serving.json artifact for the CI "
                          "perf gate instead of running the full comparison")
+    ap.add_argument("--regime", choices=sorted(SERVING_REGIMES) + ["all"],
+                    default="all",
+                    help="restrict the serving benchmark to one regime "
+                         "(one CI matrix leg each; default: all)")
+    ap.add_argument("--arrival-sweep", action="store_true",
+                    help="add mixed@<inter-arrival> cells over "
+                         f"{ARRIVAL_SWEEP} to the mixed regime")
+    ap.add_argument("--ablation", action="store_true",
+                    help="run the Table-3-style adaptive-vs-fixed-vs-off "
+                         "ablation gate instead (exit 1 on >5% adaptive "
+                         "p99 regression)")
     args = ap.parse_args()
+    regimes = None if args.regime == "all" else (args.regime,)
+    if args.ablation:
+        serving_ablation()
+        return
     if args.bench_out:
-        write_serving_bench(args.bench_out)
+        write_serving_bench(args.bench_out, regimes=regimes,
+                            arrival_sweep=args.arrival_sweep)
         return
     run_all()
 

@@ -44,6 +44,10 @@ class BackendRun:
     pu_busy: Dict[str, float] = field(default_factory=dict)
     dispatches: int = 0
     redispatches: int = 0
+    # chosen-shape histograms from the scheduler's batching policy
+    # (decode_width / decode_group / fused_batch) — stamped identically
+    # by both substrates so policy telemetry is backend-independent
+    batching: Dict[str, Dict[int, int]] = field(default_factory=dict)
 
 
 class Backend(Protocol):
@@ -89,7 +93,9 @@ class SimBackend:
                           dispatches=sum(1 for e in res.timeline
                                          if e[1] == "start"),
                           redispatches=sum(1 for e in res.timeline
-                                           if e[1] == "redispatch"))
+                                           if e[1] == "redispatch"),
+                          batching={k: dict(v) for k, v in
+                                    scheduler.policy_log.items()})
 
 
 def _instant_fn(node: Node, batch: int):
@@ -163,4 +169,6 @@ class LiveBackend:
             makespan=dag.makespan(), events=events, pu_busy=pu_busy,
             dispatches=sum(1 for e in events if e[1] == "start"),
             redispatches=sum(1 for e in events
-                             if e[1] in ("straggler", "retry")))
+                             if e[1] in ("straggler", "retry")),
+            batching={k: dict(v) for k, v in
+                      scheduler.policy_log.items()})

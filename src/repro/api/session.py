@@ -26,6 +26,11 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
   serving: same-stage ready work of different admitted queries merges
   into one fused dispatch; equivalent to
   ``cfg_overrides={"coalesce": True}``).
+- ``batch_policy="adaptive"`` derives the coalesce/decode caps, the
+  coalesce window, and per-round decode token groups online from the
+  profiled grids (``core/batch_policy.py``); ``"fixed"`` (the default)
+  keeps the ``SchedulerConfig`` constants, bit-identical to the
+  pre-adaptive scheduler.
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
@@ -88,6 +93,7 @@ class HeroSession:
                  backend: Union[str, Backend] = "sim",
                  cfg_overrides: Optional[dict] = None,
                  coalesce: Optional[bool] = None,
+                 batch_policy: Optional[str] = None,
                  fine_grained: Optional[bool] = None,
                  means: Optional[dict] = None,
                  pus: Optional[List[str]] = None,
@@ -100,6 +106,9 @@ class HeroSession:
         self.strategy = strategy
         if coalesce is not None:    # sugar for the multi-query serving knob
             cfg_overrides = {**(cfg_overrides or {}), "coalesce": coalesce}
+        if batch_policy is not None:   # sugar for the adaptive-caps knob
+            cfg_overrides = {**(cfg_overrides or {}),
+                             "batch_policy": batch_policy}
         self.cfg_overrides = cfg_overrides
         self.fine_grained = fine_grained
         self.means = means

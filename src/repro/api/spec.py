@@ -502,6 +502,10 @@ _BUILTINS: Dict[int, Callable[[], WorkflowSpec]] = {
     1: w1_spec, 2: w2_spec, 3: w3_spec}
 
 
-def builtin_spec(wf: int) -> WorkflowSpec:
-    """The paper's workflow ``wf`` ∈ {1, 2, 3} as a WorkflowSpec."""
+def builtin_spec(wf) -> WorkflowSpec:
+    """The paper's workflow ``wf`` as a WorkflowSpec: 1/2/3 or the
+    equivalent "w1"/"w2"/"w3" names (what mixed-workflow benchmark
+    configs and CLI flags pass around)."""
+    if isinstance(wf, str):
+        wf = int(wf.lower().lstrip("w"))
     return _BUILTINS[wf]()

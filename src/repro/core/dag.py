@@ -153,7 +153,13 @@ class DynamicDAG:
                      kind="stream_decode",
                      workload=max(m.workload for m in members),
                      payload={"members": list(members), "decode_round": True,
-                              "decode_width": len(members)})
+                              "decode_width": len(members),
+                              # sorted member remainders: the horizon
+                              # policy picks the round's token group from
+                              # this distribution (ragged tails leave at a
+                              # boundary instead of being padded to one)
+                              "remaining": sorted(m.workload
+                                                  for m in members)})
         # KV caches of a resident batch live on the PU that served the
         # previous round; the scheduler charges migration when moving
         prev_pus = {m.payload.get("batch_pu") for m in members} - {None}

@@ -28,6 +28,22 @@ def ceil_passes(workload: int, batch: int) -> int:
     return -(-max(workload, 1) // max(batch, 1))
 
 
+def dispatch_passes(node: "Node", batch: int) -> int:
+    """Passes ONE dispatch of ``node`` actually executes — the quantity
+    straggler ETAs and busy-PU estimates must use.
+
+    A continuous-batching decode round serves exactly one token-group
+    boundary per dispatch — one pass, never ⌈horizon/n⌉.  (The round's
+    workload normally arrives pre-trimmed to the group, but a round
+    re-entering the pool after a live-mode straggler cancellation carries
+    a stale trim while its partially-decoded residents have advanced —
+    ⌈L/n⌉ over that horizon overestimated the drain and made cancelled
+    rounds look slow enough to defer or migrate for no reason.)"""
+    if node.payload.get("decode_round"):
+        return 1
+    return ceil_passes(node.workload, batch)
+
+
 def best_batch(perf: LinearPerfModel, stage: str, pu: str, L: int,
                candidates: Sequence[int] = DEFAULT_BATCH_CANDIDATES
                ) -> Tuple[int, float]:

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -511,6 +511,83 @@ class LinearPerfModel:
         X = self._dfeats(np.array([width]), np.array([group]),
                          self._tiles[pu])
         return float(np.exp((X @ self.decode_bw_coef[(stage, pu)])[0]))
+
+    # -- profiled-grid queries (adaptive batching policy) -----------------
+    # The batching policy enumerates these grids the way Eq. 3 enumerates
+    # n*: caps and windows are *derived* from the profiled sweet spot per
+    # (stage, PU) instead of hand-picked constants (ROADMAP item 1).
+
+    def batch_grid(self, stage: str, pu: str) -> Tuple[int, ...]:
+        """Profiled batch sizes for ``(stage, pu)`` (the measured table
+        points — the only shapes the policy trusts for cap derivation)."""
+        return tuple(sorted(self.table.get((stage, pu), {})))
+
+    def decode_width_grid(self, stage: str, pu: str) -> Tuple[int, ...]:
+        """Profiled resident widths of the decode ``(width, group)`` grid
+        (empty for non-decode stages / pre-serving profile files)."""
+        return tuple(sorted({w for (w, _g)
+                             in self.decode_table.get((stage, pu), {})}))
+
+    def decode_group_grid(self, stage: str, pu: str) -> Tuple[int, ...]:
+        """Profiled token groups of the decode ``(width, group)`` grid."""
+        return tuple(sorted({g for (_w, g)
+                             in self.decode_table.get((stage, pu), {})}))
+
+    def per_item(self, stage: str, pu: str, batch: int) -> float:
+        """Per-member latency of one pass at ``batch`` — the curve whose
+        knee the coalesce cap sits at (Fig. 2's "larger batches do not
+        always yield better per-item efficiency")."""
+        return self.p0(stage, pu, batch) / max(batch, 1)
+
+    def per_member_decode(self, stage: str, pu: str, width: int,
+                          group: int) -> float:
+        """Per-resident latency of one width-``width`` token-group pass.
+        Width 1 degrades to the ordinary single-stream profile."""
+        return self.p0_decode(stage, pu, width, group) / max(width, 1)
+
+    def decode_marginal_gains(self, stage: str, pu: str, group: int
+                              ) -> List[Tuple[int, float]]:
+        """``[(width, gain)]`` over the profiled width grid: ``gain`` is the
+        drop in per-member latency when the resident batch widens from the
+        previous grid width (positive while sharing the per-step weight
+        sweep still pays, negative past the spill knee)."""
+        widths = self.decode_width_grid(stage, pu)
+        out: List[Tuple[int, float]] = []
+        prev = self.p0(stage, pu, group)      # width-1 solo baseline
+        for w in widths:
+            cur = self.per_member_decode(stage, pu, w, group)
+            out.append((w, prev - cur))
+            prev = cur
+        return out
+
+    def batch_marginal_gains(self, stage: str, pu: str
+                             ) -> List[Tuple[int, float]]:
+        """``[(batch, gain)]`` over the profiled batch grid — the coalesce
+        width profile for batchable stages (the dual of the decode grid)."""
+        grid = self.batch_grid(stage, pu)
+        out: List[Tuple[int, float]] = []
+        prev = None
+        for n in grid:
+            cur = self.per_item(stage, pu, n)
+            out.append((n, 0.0 if prev is None else prev - cur))
+            prev = cur
+        return out
+
+    def dispatch_overhead(self, stage: str, pu: str) -> float:
+        """Fitted per-dispatch overhead: extrapolate the profiled latency
+        line to batch → 0 via the two smallest grid points (p0 ≈ o + c·n
+        ⇒ o = 2·p0(n1) − p0(2·n1) when n2 = 2·n1; clamped ≥ 0).  This is
+        the invocation cost one coalesced member *saves* by riding a fused
+        dispatch instead of paying its own."""
+        grid = self.batch_grid(stage, pu)
+        if not grid:
+            return 0.0
+        if len(grid) == 1:
+            return self.p0(stage, pu, grid[0])
+        n1, n2 = grid[0], grid[1]
+        p1, p2 = self.p0(stage, pu, n1), self.p0(stage, pu, n2)
+        slope = (p2 - p1) / max(n2 - n1, 1)
+        return max(p1 - slope * n1, 0.0)
 
     def phi(self, stage: str, B: float) -> float:
         """Monotone projection of the fitted quadratic: a convex parabola is

@@ -28,8 +28,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import concurrency as cc
 from repro.core import criticality as crit
+from repro.core.batch_policy import ArrivalTracker, make_policy
 from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
-from repro.core.partitioner import ceil_passes, shape_aware_configs
+from repro.core.partitioner import (ceil_passes, dispatch_passes,
+                                    shape_aware_configs)
 from repro.core.perf_model import LinearPerfModel
 
 
@@ -65,6 +67,12 @@ class SchedulerConfig:
     # seconds charged when a resident batch's next round moves PU (KV-cache
     # migration); keeps batches sticky per (stage, PU) unless moving wins
     decode_migrate_cost: float = 0.01
+    # batching-cap policy: "fixed" uses the three constants above verbatim
+    # (bit-identical to the pre-adaptive scheduler, pinned against
+    # committed goldens); "adaptive" derives coalesce/decode caps, the
+    # coalesce window, and per-round token groups online from the
+    # profiled (width, group) / batch grids (core/batch_policy.py)
+    batch_policy: str = "fixed"
 
 
 @dataclass
@@ -89,6 +97,18 @@ class HeroScheduler:
         self.template = template
         self._fifo_seq: Dict[str, int] = {}
         self._seq = 0
+        # batching policy (fixed constants vs online derivation from the
+        # profiled grids) + the ready-pool inter-arrival EWMA it consults
+        self.policy = make_policy(self.cfg, perf)
+        self.arrivals = ArrivalTracker()
+        # last-seen decode_rounds per resident id: detects boundary
+        # re-entries (same node id, another ready-pool arrival)
+        self._seen_rounds: Dict[str, int] = {}
+        # chosen-shape telemetry per dispatch (benchmarks report these):
+        # histograms of resident decode widths, per-round token groups,
+        # and fused batchable dispatch sizes
+        self.policy_log: Dict[str, Dict[int, int]] = {
+            "decode_width": {}, "decode_group": {}, "fused_batch": {}}
 
     # -- elastic PU membership (fault tolerance / scale up-down) -----------
     def add_pu(self, pu: str):
@@ -117,6 +137,33 @@ class HeroScheduler:
             if n.id not in self._fifo_seq:
                 self._fifo_seq[n.id] = self._seq
                 self._seq += 1
+                self._seen_rounds[n.id] = n.payload.get("decode_rounds", 0)
+                # ready-pool arrival: feeds the adaptive policy's
+                # queueing-delay estimate
+                if n.kind != "io":
+                    self.arrivals.observe((n.stage, n.kind), now)
+            elif (n.payload.get("decode_round")
+                  and n.payload.get("members")):
+                # a round back in the pool (live-mode straggler
+                # cancellation): its workload still carries the previous
+                # dispatch's group trim while the residents have advanced
+                # — refresh the horizon (and the remainder snapshot the
+                # group policy reads) from their true remaining tokens so
+                # ETA and group choice see remaining work, not stale
+                # padding
+                n.payload["remaining"] = sorted(
+                    m.workload for m in n.payload["members"])
+                n.workload = n.payload["remaining"][-1]
+            elif (n.payload.get("decode_rounds", 0)
+                  != self._seen_rounds.get(n.id)):
+                # a resident re-entering READY at a token-group boundary
+                # keeps its node id but IS a fresh ready-pool arrival —
+                # the next member a forming batch would wait for; without
+                # this, tau freezes after initial admissions in
+                # continuous serving
+                self._seen_rounds[n.id] = n.payload.get("decode_rounds", 0)
+                if n.kind != "io":
+                    self.arrivals.observe((n.stage, n.kind), now)
         fused_new = self._coalesce(dag) if cfgn.coalesce else []
         # Eq. 5 protects a single query's critical path — the right
         # objective in the paper's one-query-at-a-time regime.  A fused
@@ -205,7 +252,15 @@ class HeroScheduler:
                     else:
                         p0 = self.perf.p0(v_cand.stage, pu, batch)
                     phi = self.perf.phi(v_cand.stage, B_now + b)
-                    passes = ceil_passes(v_cand.workload, batch)
+                    if v_cand.payload.get("decode_round"):
+                        # rounds amortize over the residents' remaining
+                        # horizon: fixed charges the longest member to
+                        # every candidate, adaptive weighs each member's
+                        # own remainder (mean completion — the horizon
+                        # policy's scoring)
+                        passes = self.policy.round_passes(v_cand, batch)
+                    else:
+                        passes = ceil_passes(v_cand.workload, batch)
                     f_cand = start + passes * p0 * phi          # line 12 (Eq. 2)
                     w_b = cc.contention_penalty(
                         self.perf, gate_star, b, B_now, now
@@ -236,14 +291,17 @@ class HeroScheduler:
                 p_star = (self.perf.p0(gate_star.stage, sp, sb)
                           * ceil_passes(gate_star.workload, sb))
                 damage = (phi1 - phi0) * p_star
-                benefit = d.predicted_p0 * ceil_passes(d.node.workload,
-                                                       d.batch)
+                # dispatch_passes: a decode round's overlap benefit is
+                # one token-group pass, not the residents' whole horizon
+                # (which is served across later rounds)
+                benefit = d.predicted_p0 * dispatch_passes(d.node, d.batch)
                 if cfgn.alpha * damage > benefit:
                     r_tmp.remove(v_cand)
                     continue
             piece = self._take_substage(dag, d.node, d.batch)   # Eq. 3 split
             d = dataclasses.replace(d, node=piece)
             dag.mark_running(piece.id, now, (d.pu, d.batch))    # line 17
+            self._log_choice(piece, d.batch)
             decisions.append(d)
             idle.remove(d.pu)                                   # line 18-19
             passes = ceil_passes(piece.workload, d.batch)
@@ -299,16 +357,30 @@ class HeroScheduler:
             # Oversized nodes are skipped (they dispatch solo) rather than
             # blocking fusion of the smaller nodes behind them.
             nodes.sort(key=lambda n: -n.criticality)
+            stage = nodes[0].stage
+            tau = self.arrivals.tau((stage, kind))
             if kind == "stream_decode":
-                take = nodes[:cfgn.decode_batch_cap]
+                # KV residency: the cap is derived at the PU holding the
+                # previous round's caches when the candidates agree on one
+                prev = {n.payload.get("batch_pu") for n in nodes} - {None}
+                prefer = next(iter(prev)) if len(prev) == 1 else None
+                cap = self.policy.decode_width_cap(
+                    stage, prefer, tau, [n.workload for n in nodes])
+                if self.policy.name == "adaptive":
+                    # horizon policy: when the cap binds, prefer residents
+                    # closest to leaving (shortest remaining first) so
+                    # boundaries release members instead of padding them
+                    nodes.sort(key=lambda n: n.workload)
+                take = nodes[:cap]
                 if len({self._query_key(n.id) for n in take}) < 2:
                     continue
                 fused = dag.fuse_decode(take)
             else:
+                window = self.policy.coalesce_window(stage, tau)
                 take = []
                 total = 0
                 for n in nodes:
-                    if total + n.workload > cfgn.coalesce_window:
+                    if total + n.workload > window:
                         continue
                     take.append(n)
                     total += n.workload
@@ -321,6 +393,20 @@ class HeroScheduler:
         return created
 
     # -- helpers -------------------------------------------------------------
+    def _log_choice(self, node: Node, batch: int) -> None:
+        """Chosen-shape telemetry: resident width + token group per decode
+        round, merged batch per fused dispatch (what the serving benchmark
+        reports per regime — the observable output of the batching policy)."""
+        if node.payload.get("decode_round"):
+            w = node.payload.get("decode_width", 1)
+            wh = self.policy_log["decode_width"]
+            wh[w] = wh.get(w, 0) + 1
+            gh = self.policy_log["decode_group"]
+            gh[batch] = gh.get(batch, 0) + 1
+        elif "members" in node.payload:
+            fh = self.policy_log["fused_batch"]
+            fh[batch] = fh.get(batch, 0) + 1
+
     def _capable_pus(self, node: Node, idle: Sequence[str]) -> List[str]:
         if node.kind == "io":
             return ["io"] if "io" in idle else []
@@ -337,16 +423,22 @@ class HeroScheduler:
         if node.payload.get("decode_round"):
             # one boundary per dispatch: token-group candidates, clipped to
             # the batch's remaining horizon (the dispatch trims to the
-            # chosen group; unfinished members re-enter at the boundary)
+            # chosen group; unfinished members re-enter at the boundary).
+            # The adaptive policy aligns candidates to the sorted member
+            # remainders (per-round group selection — no ragged-tail
+            # padding); fixed keeps the static ladder.
+            groups = self.policy.round_group_candidates(node)
+            if groups is None:
+                groups = (self.cfg.token_group, self.cfg.token_group * 2,
+                          self.cfg.token_group * 4)
             return shape_aware_configs(self.perf, node, pu,
-                                       token_groups=(self.cfg.token_group,
-                                                     self.cfg.token_group * 2,
-                                                     self.cfg.token_group * 4))
+                                       token_groups=tuple(groups))
         if "members" in node.payload:
             # fused dispatch: coalescing IS a batching decision, so merged
             # shape configs are enumerated even with partitioning ablated
             return shape_aware_configs(self.perf, node, pu,
-                                       cap=self.cfg.coalesce_cap)
+                                       cap=self.policy.coalesce_cap(
+                                           node.stage, pu))
         if not self.cfg.enable_partition:
             return [max(node.workload, 1)]
         return shape_aware_configs(self.perf, node, pu,

@@ -21,7 +21,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.dag import DynamicDAG, Node
-from repro.core.partitioner import ceil_passes
+from repro.core.partitioner import ceil_passes, dispatch_passes
 from repro.core.perf_model import Config, GroundTruthPerf
 from repro.core.scheduler import Dispatch, HeroScheduler
 
@@ -215,11 +215,13 @@ class Simulator:
             work *= self.straggler_slow
         if not is_timer and self.rng.random() < self.fail_prob:
             work *= 1e6  # never completes; straggler detection reaps it
+        # dispatch_passes: a decode round's predicted drain is one pass at
+        # the current group, same as the live runtime's heartbeat ETA
+        # (value-identical to ceil_passes on every non-round dispatch)
         active[d.node.id] = ActiveTask(
             node=d.node, pu=d.pu, batch=d.batch, work_left=work,
             bandwidth=bw, dispatched_at=now,
-            predicted=d.predicted_p0 * ceil_passes(d.node.workload,
-                                                   d.batch))
+            predicted=d.predicted_p0 * dispatch_passes(d.node, d.batch))
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
         self._note(timeline, now, "start", d.node)

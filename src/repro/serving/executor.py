@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.dag import DynamicDAG, Node
-from repro.core.partitioner import ceil_passes
+from repro.core.partitioner import dispatch_passes
 from repro.core.scheduler import Dispatch, HeroScheduler
 
 StageFn = Callable[[Node, int], Any]   # (node, batch) -> result
@@ -147,8 +147,13 @@ class HeroRuntime:
             # a dispatch runs ceil(L/batch) passes of p0 each — fused
             # (cross-query coalesced) nodes run whole, so multi-pass
             # dispatches are the norm there, and ETAs must account for it
-            # exactly as the simulator does
-            return d.predicted_p0 * ceil_passes(d.node.workload, d.batch)
+            # exactly as the simulator does.  Decode rounds serve ONE
+            # token group per dispatch: their ETA comes from the
+            # remaining tokens at the current group, not the residents'
+            # whole horizon (dispatch_passes) — otherwise a cancellation
+            # drain overestimates a partially-decoded batch's remaining
+            # work and the straggler heartbeat re-reaps it immediately
+            return d.predicted_p0 * dispatch_passes(d.node, d.batch)
 
         def busy_until():
             return {d.pu: d_task.started - t0 + predicted_total(d)

@@ -1,0 +1,349 @@
+"""Adaptive batching policy (the PR 4 tentpole).
+
+Covers the ISSUE's required invariants: the derived decode width equals
+the argmin knee of the profiled per-member marginal-gain curve on
+synthetic grids (monotone grids saturate the cap — property-tested when
+hypothesis is installed), already-READY members are never truncated below
+the knee, the coalesce cap/window derivations are monotone in overhead
+and arrival rate, ``batch_policy="fixed"`` reproduces the PR 2 and PR 3
+goldens bit-exactly, sim/live parity at 8 mixed W1-W3 queries, and the
+decode-round straggler-ETA fix (one token group per dispatch).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import HeroSession
+from repro.api.session import make_world
+from repro.api.spec import builtin_spec
+from repro.core import SchedulerConfig
+from repro.core.batch_policy import (AdaptiveBatchPolicy, ArrivalTracker,
+                                     FixedBatchPolicy, make_policy)
+from repro.core.dag import Node
+from repro.core.partitioner import ceil_passes, dispatch_passes
+from repro.core.perf_model import LinearPerfModel
+from repro.rag import default_means, sample_traces
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+# --- synthetic profiled grids -------------------------------------------------
+
+def synthetic_perf(per_member, per_item=None, stage="dec", pu="xpu",
+                   group=16):
+    """A LinearPerfModel whose profiled tables are handcrafted.
+
+    ``per_member``: {width: per-member latency of one group pass} — the
+    decode grid (width 1 entry is the solo baseline).  ``per_item``:
+    {batch: per-item latency} for the batchable grid."""
+    m = LinearPerfModel()
+    m._tiles = {pu: 8}
+    m._b0 = 1e9
+    m.coef[(stage, pu)] = np.zeros(4)
+    # width-1 solo baseline: one group pass at the member's own latency
+    m.table[(stage, pu)] = {group: (per_member[1], 0.0)}
+    m.decode_table[(stage, pu)] = {
+        (w, group): (pm * w, 0.0) for w, pm in per_member.items() if w > 1}
+    if per_item is not None:
+        m.table[(stage, pu)] = {n: (t * n, 0.0)
+                                for n, t in per_item.items()}
+        m.table[(stage, pu)].setdefault(group, (per_member[1], 0.0))
+    return m
+
+
+def adaptive(perf, **cfg_kw):
+    return AdaptiveBatchPolicy(SchedulerConfig(**cfg_kw), perf)
+
+
+# --- decode width cap ---------------------------------------------------------
+
+def test_width_cap_is_argmin_of_marginal_gain_curve():
+    """Convex per-member curve (gains positive then negative): the derived
+    width is the argmin — the knee where marginal gain crosses zero."""
+    pm = {1: 1.0, 2: 0.55, 3: 0.40, 4: 0.35, 6: 0.45, 8: 0.60}
+    pol = adaptive(synthetic_perf(pm))
+    cap = pol.decode_width_cap("dec", "xpu", tau=None)
+    curve = {w: v for w, v in pm.items() if w > 1}
+    assert cap == min(curve, key=curve.get) == 4
+
+
+def test_width_cap_saturates_on_monotone_grid():
+    """Monotone decreasing per-member latency ⇒ every marginal gain is
+    positive ⇒ the cap saturates at the top of the profiled grid."""
+    pm = {1: 1.0, 2: 0.5, 3: 0.34, 4: 0.26, 6: 0.18, 8: 0.14}
+    pol = adaptive(synthetic_perf(pm))
+    assert pol.decode_width_cap("dec", "xpu", tau=None) == 8
+
+
+def test_width_cap_never_truncates_ready_members_below_knee():
+    """READY members ride along for free: a sparse-arrival tau may limit
+    the width held open for future members, but the cap never cuts the
+    already-ready set below the spill knee."""
+    pm = {1: 1.0, 2: 0.5, 3: 0.34, 4: 0.26, 6: 0.18, 8: 0.14}
+    pol = adaptive(synthetic_perf(pm))
+    sparse = 1e6   # arrivals far slower than any residency
+    assert pol.decode_width_cap("dec", "xpu", tau=sparse) == 2
+    got = pol.decode_width_cap("dec", "xpu", tau=sparse,
+                               remainders=[64, 64, 64, 64, 64, 64])
+    assert got == 6
+    # ...but past the knee, truncation is correct even for ready members
+    pm_spill = {1: 1.0, 2: 0.55, 3: 0.40, 4: 0.35, 6: 0.45, 8: 0.60}
+    pol2 = adaptive(synthetic_perf(pm_spill))
+    got2 = pol2.decode_width_cap("dec", "xpu", tau=sparse,
+                                 remainders=[64] * 8)
+    assert got2 == 4
+
+
+def test_width_cap_monotone_in_tau():
+    """Sparser arrivals can only shrink the width held open for members
+    who have not arrived yet."""
+    pm = {1: 1.0, 2: 0.5, 3: 0.34, 4: 0.26, 6: 0.18, 8: 0.14}
+    pol = adaptive(synthetic_perf(pm))
+    caps = [pol.decode_width_cap("dec", "xpu", tau=t)
+            for t in (None, 0.0, 1.0, 100.0, 1e6)]
+    assert caps == sorted(caps, reverse=True)
+    assert caps[0] == 8 and caps[-1] == 2
+
+
+def test_width_cap_hypothesis_monotone_grids_saturate():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.floats(0.01, 0.5), min_size=5, max_size=5),
+               st.floats(0.5, 2.0))
+    @hyp.settings(max_examples=30, deadline=None)
+    def prop(drops, start):
+        pm, cur = {1: start}, start
+        for w, d in zip((2, 3, 4, 6, 8), drops):
+            cur = cur * (1.0 - 0.1 - 0.8 * d / 0.5 * 0.1)  # strictly down
+            pm[w] = cur
+        pol = adaptive(synthetic_perf(pm))
+        assert pol.decode_width_cap("dec", "xpu", tau=None) == 8
+
+    prop()
+
+
+# --- coalesce cap / window ----------------------------------------------------
+
+def test_coalesce_cap_is_per_item_knee():
+    per_item = {1: 1.0, 8: 0.4, 16: 0.25, 32: 0.2, 64: 0.3, 128: 0.5}
+    pol = adaptive(synthetic_perf({1: 1.0, 2: 0.5}, per_item=per_item))
+    assert pol.coalesce_cap("dec") == 32
+    assert pol.coalesce_cap("dec", "xpu") == 32
+
+
+def test_coalesce_window_monotone_and_bounded():
+    per_item = {1: 1.0, 8: 0.4, 16: 0.25, 32: 0.2, 64: 0.3}
+    pol = adaptive(synthetic_perf({1: 1.0, 2: 0.5}, per_item=per_item))
+    cap = pol.coalesce_cap("dec")
+    # no arrival history: service-bound, ladder top
+    assert pol.coalesce_window("dec", None) == cap * pol.WINDOW_MAX_PASSES
+    windows = [pol.coalesce_window("dec", tau)
+               for tau in (1e-6, 1.0, 10.0, 1e6)]
+    assert windows == sorted(windows, reverse=True)
+    for w in windows:
+        assert cap <= w <= cap * pol.WINDOW_MAX_PASSES
+    assert windows[0] == cap * pol.WINDOW_MAX_PASSES   # saturation opens up
+    assert windows[-1] == cap                          # sparse: one pass
+
+
+def test_dispatch_overhead_recovers_linear_intercept():
+    o, c = 0.05, 0.01
+    per_item = {n: (o + c * n) / n for n in (1, 2, 4, 8, 16)}
+    pol = adaptive(synthetic_perf({1: 1.0, 2: 0.5}, per_item=per_item))
+    assert pol.perf.dispatch_overhead("dec", "xpu") == pytest.approx(o)
+
+
+def test_fixed_policy_returns_config_constants():
+    perf = synthetic_perf({1: 1.0, 2: 0.5})
+    cfg = SchedulerConfig(coalesce_cap=99, coalesce_window=123,
+                          decode_batch_cap=7)
+    pol = make_policy(cfg, perf)
+    assert isinstance(pol, FixedBatchPolicy) and pol.name == "fixed"
+    assert pol.decode_width_cap("dec", None, tau=0.1) == 7
+    assert pol.coalesce_cap("dec") == 99
+    assert pol.coalesce_window("dec", 0.1) == 123
+    with pytest.raises(KeyError):
+        make_policy(SchedulerConfig(batch_policy="nope"), perf)
+
+
+# --- arrival EWMA -------------------------------------------------------------
+
+def test_arrival_tracker_ewma():
+    tr = ArrivalTracker(alpha=0.5)
+    key = ("chat_decode", "stream_decode")
+    assert tr.tau(key) is None
+    tr.observe(key, 1.0)
+    assert tr.tau(key) is None          # one arrival: no gap yet
+    tr.observe(key, 3.0)
+    assert tr.tau(key) == pytest.approx(2.0)
+    tr.observe(key, 4.0)                # gap 1.0 -> ewma 1.5
+    assert tr.tau(key) == pytest.approx(1.5)
+    assert tr.tau(("other", "stream_decode")) is None
+
+
+# --- per-round group selection (horizon policy) -------------------------------
+
+def _round_node(remainders, stage="chat_decode"):
+    members = [Node(f"q{i}/d", stage, "stream_decode", r)
+               for i, r in enumerate(remainders)]
+    return Node("dround:x", stage, "stream_decode", max(remainders),
+                payload={"members": members, "decode_round": True,
+                         "decode_width": len(members)})
+
+
+def test_round_group_candidates_align_to_remainders():
+    _soc, _gt, perf = make_world("sd8gen4", "qwen3")
+    pol = AdaptiveBatchPolicy(SchedulerConfig(batch_policy="adaptive"), perf)
+    node = _round_node([5, 40, 80])
+    cands = pol.round_group_candidates(node)
+    grid = perf.decode_group_grid("chat_decode",
+                                  pol._anchor_pu("chat_decode"))
+    # the shortest member's remainder anchors a candidate at (or below)
+    # its grid floor, so it can leave at the next boundary unpadded
+    assert min(cands) <= 5
+    assert all(g in grid or g <= 5 for g in cands)
+    assert cands == sorted(cands)
+
+
+def test_round_passes_mean_completion_vs_fixed_horizon():
+    node = _round_node([4, 16, 64])
+    fixed = FixedBatchPolicy(SchedulerConfig(), None)
+    ada = AdaptiveBatchPolicy.__new__(AdaptiveBatchPolicy)  # no perf needed
+    ada.cfg = SchedulerConfig()
+    assert fixed.round_passes(node, 16) == ceil_passes(64, 16) == 4
+    # mean over member remainders: (1 + 1 + 4) / 3
+    assert AdaptiveBatchPolicy.round_passes(ada, node, 16) \
+        == pytest.approx(2.0)
+
+
+def test_dispatch_passes_round_serves_one_group():
+    """The straggler-ETA fix: a decode round's dispatch serves exactly one
+    token group, so its predicted drain is one pass even when the node
+    still carries the residents' horizon (or a stale trim)."""
+    node = _round_node([200, 120])
+    node.workload = 200
+    assert dispatch_passes(node, 16) == 1
+    solo = Node("q0/d", "chat_decode", "stream_decode", 200)
+    assert dispatch_passes(solo, 16) == ceil_passes(200, 16) == 13
+
+
+# --- goldens: fixed policy is bit-identical to PR 2 / PR 3 --------------------
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("hotpotqa", 8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def means(traces):
+    return default_means(traces)
+
+
+def test_fixed_policy_reproduces_pr2_coalesce_off_goldens(traces, means):
+    with open(os.path.join(GOLDEN_DIR, "pr2_coalesce_off.json")) as f:
+        golden = json.load(f)
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=False, batch_policy="fixed")
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+    got = [r.makespan for r in sess.run()]
+    assert got == pytest.approx(golden["staggered8_w1_makespans"], rel=1e-12)
+
+
+@pytest.mark.parametrize("regime,ia", [("saturated", 0.25),
+                                       ("staggered", 2.0)])
+def test_fixed_policy_reproduces_pr3_decode_goldens(traces, means, regime,
+                                                    ia):
+    """The PR 3 continuous-decode-batching behavior, captured before the
+    adaptive policy landed: batch_policy="fixed" must reproduce it
+    bit-exactly (every adaptive code path dormant)."""
+    with open(os.path.join(GOLDEN_DIR, "pr3_decode_batch.json")) as f:
+        golden = json.load(f)
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, batch_policy="fixed")
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * ia)
+    got = [r.makespan for r in sess.run()]
+    assert got == pytest.approx(golden[f"{regime}8_w1_decode_makespans"],
+                                rel=1e-12)
+
+
+# --- end-to-end: mixed W1-W3 --------------------------------------------------
+
+def _mixed_session(traces, means, backend="sim", **kw):
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, batch_policy="adaptive",
+                       backend=backend, **kw)
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=(1, 2, 3)[qi % 3], arrival_time=qi * 0.5)
+    return sess
+
+
+@pytest.mark.slow
+def test_sim_live_parity_8_mixed_w1_w3(means):
+    """The ISSUE's parity bar: 8 mixed W1-W3 queries under the adaptive
+    policy produce the same per-query stage sets on both substrates, with
+    continuous decode batching active on both."""
+    import time as _time
+    traces8 = sample_traces("hotpotqa", 8, seed=11)
+    by = {}
+    for backend in ("sim", "live"):
+        kw = {}
+        if backend == "live":
+            kw["stage_fns"] = {"chat_decode":
+                               lambda n, b: _time.sleep(0.02)}
+        sess = _mixed_session(traces8, means, backend=backend, **kw)
+        for h in sess.queries:
+            h.arrival_time = h.qid * 0.05   # wall-clock friendly stagger
+        by[backend] = sess.run(timeout=180)
+    for s, live in zip(by["sim"], by["live"]):
+        assert s.qid == live.qid and s.workflow == live.workflow
+        assert set(s.stage_latency) == set(live.stage_latency)
+        assert s.makespan > 0 and live.makespan > 0
+    assert sum(r.decode_rounds for r in by["sim"]) > 0
+    assert sum(r.decode_rounds for r in by["live"]) > 0
+
+
+def test_adaptive_beats_fixed_caps_on_mixed(means):
+    """The acceptance bar the CI ablation leg enforces, in-tree: on the
+    mixed W1-W3 regime the adaptive policy's p99 beats the fixed caps."""
+    traces9 = sample_traces("hotpotqa", 9, seed=11)
+    out = {}
+    for pol in ("fixed", "adaptive"):
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           coalesce=True, batch_policy=pol)
+        for qi, tr in enumerate(traces9):
+            sess.submit(tr, wf=(1, 2, 3)[qi % 3], arrival_time=qi * 0.5)
+        res = sess.run(timeout=7200)
+        out[pol] = float(np.percentile([r.makespan for r in res], 99))
+    assert out["adaptive"] < out["fixed"]
+
+
+def test_adaptive_deterministic(means):
+    traces6 = sample_traces("hotpotqa", 6, seed=11)
+
+    def once():
+        sess = _mixed_session(traces6, means)
+        return [r.makespan for r in sess.run(timeout=7200)]
+
+    assert once() == once()
+
+
+def test_session_reports_chosen_shapes(traces, means):
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, batch_policy="adaptive")
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+    sess.run()
+    b = sess.last_run.batching
+    assert sum(b["decode_width"].values()) > 0
+    assert sum(b["decode_group"].values()) > 0
+    assert all(w >= 2 for w in b["decode_width"])
+
+
+def test_builtin_spec_accepts_names():
+    assert builtin_spec("w2").name == builtin_spec(2).name == "w2"
+    assert builtin_spec("W3").name == "w3"
