@@ -74,6 +74,16 @@ def compare(current: dict, baseline: dict, tol: float):
                         f"{regime}/{variant} {metric}: {cur:.2f}s vs "
                         f"baseline {base:.2f}s (+{delta:.1f}% > "
                         f"{tol * 100:.0f}% tolerance)")
+            # KV-residency telemetry: informational columns (migration
+            # counts shift with scheduling choices; the p99/total gates
+            # above are what enforce their cost)
+            if "kv_migrations" in cur_row:
+                report.append(
+                    f"{regime}/{variant} kv_migrations: "
+                    f"{base_row.get('kv_migrations', 0)} -> "
+                    f"{cur_row['kv_migrations']}, bytes_moved: "
+                    f"{base_row.get('kv_bytes', 0.0) / 1e9:.2f} GB -> "
+                    f"{cur_row.get('kv_bytes', 0.0) / 1e9:.2f} GB")
     # structural serving claims, checked on whatever regimes this leg ran:
     # continuous decode batching keeps its p99 win over stage coalescing
     # under saturating arrivals, and the adaptive policy keeps its win
@@ -90,6 +100,15 @@ def compare(current: dict, baseline: dict, tol: float):
         regressions.append(
             f"mixed: hero+adaptive p99 {ada['p99']:.2f}s no longer beats "
             f"fixed-cap p99 {fix['p99']:.2f}s")
+    # modeled migration pricing beats the constant on the migration-heavy
+    # regime (long-context W3 under PU pressure — the cell KV-residency
+    # tracking exists for; both cells pay real transfer physics)
+    mig = cur_regimes.get("migration", {})
+    kvm, kvc = mig.get("hero+kv"), mig.get("hero+kv-const")
+    if kvm and kvc and kvm["p99"] >= kvc["p99"]:
+        regressions.append(
+            f"migration: hero+kv p99 {kvm['p99']:.2f}s no longer beats "
+            f"constant-priced hero+kv-const p99 {kvc['p99']:.2f}s")
     return report, regressions, missing
 
 

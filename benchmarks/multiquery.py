@@ -83,14 +83,32 @@ def run(csv=print, k: int = 3, wf: int = 2, dataset: str = "hotpotqa",
 
 # serving scheduler variants: plain HeRo, stage coalescing only (the PR 2
 # lever), coalescing + continuous decode batching under the PR 3 fixed
-# caps, and the full adaptive batching policy (caps/windows/groups
-# derived online from the profiled grids — the serving default)
+# caps, the full adaptive batching policy (caps/windows/groups derived
+# online from the profiled grids — the serving default), and the adaptive
+# policy with p99-aware (high-quantile) round scoring
 VARIANTS = (
     ("hero", dict(coalesce=False)),
     ("hero+coalesce", dict(coalesce=True,
                            cfg_overrides={"decode_batch": False})),
     ("hero+decode_batch", dict(coalesce=True)),
     ("hero+adaptive", dict(coalesce=True, batch_policy="adaptive")),
+    ("hero+adaptive-q", dict(coalesce=True, batch_policy="adaptive",
+                             cfg_overrides={"round_score": "quantile"})),
+)
+
+# the migration-heavy regime's variant set: the adaptive scheduler with
+# KV-residency tracking on, priced by the legacy constant (the
+# mischarging baseline — real transfers are charged but the scheduler
+# still sees 10 ms per move) vs the modeled footprint ÷ link-bandwidth
+# cost; the two legacy (physics-off) cells anchor the comparison
+KV_VARIANTS = (
+    ("hero+decode_batch", dict(coalesce=True)),
+    ("hero+adaptive", dict(coalesce=True, batch_policy="adaptive")),
+    ("hero+kv-const", dict(coalesce=True, batch_policy="adaptive",
+                           cfg_overrides={"kv_residency": True,
+                                          "migrate_pricing": "constant"})),
+    ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
+                     kv_residency=True)),
 )
 
 
@@ -105,7 +123,7 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
                        means=means, **kw)
     for qi, tr in enumerate(traces):
         sess.submit(tr, wf=wfs[qi % len(wfs)], arrival_time=qi * inter_arrival)
-    res = sess.run(timeout=7200)
+    res = sess.run(timeout=14400)
     lats = np.array([r.makespan for r in res])
     batching = sess.last_run.batching
     return {"total": float(max(r.finish_time for r in res)),
@@ -114,6 +132,10 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
             "p99": float(np.percentile(lats, 99)),
             "coalesced": int(sum(r.coalesced_nodes for r in res)),
             "decode_rounds": int(sum(r.decode_rounds for r in res)),
+            # KV-residency telemetry: decode-stream cache moves and the
+            # bytes they shipped (zero with the subsystem off)
+            "kv_migrations": int(sess.last_run.kv_migrations),
+            "kv_bytes": float(sess.last_run.kv_bytes_moved),
             # chosen shapes per regime: the observable output of the
             # batching policy (widths/groups the scheduler actually ran)
             "decode_widths": dict(batching.get("decode_width", {})),
@@ -122,13 +144,20 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
 
 # the bench-smoke CI matrix: saturating W1 arrivals (the continuous-
 # batching stress case), a wider staggered W1 grid (continuous
-# admission), and a mixed regime interleaving W1-W3 — where no single
-# fixed cap suits every decode stage, the case the adaptive policy
-# exists for; all on the sim backend so CI is deterministic
+# admission), a mixed regime interleaving W1-W3 — where no single fixed
+# cap suits every decode stage, the case the adaptive policy exists for —
+# and a migration-heavy regime: long-context W3 streams (sampled traces
+# stretched by ctx/answer scale) under PU pressure, where decode KV
+# footprints run to hundreds of MB and mispricing a PU move is visible
+# in p99 — the cell KV-residency tracking exists for.  All on the sim
+# backend so CI is deterministic.  A regime's ``variants`` replaces the
+# default scheduler-variant set for that regime only.
 SERVING_REGIMES = {
     "saturated": dict(k=8, wfs=(1,), inter_arrival=0.25),
     "staggered": dict(k=8, wfs=(1,), inter_arrival=2.0),
     "mixed": dict(k=9, wfs=(1, 2, 3), inter_arrival=0.5),
+    "migration": dict(k=8, wfs=(3,), inter_arrival=1.0,
+                      ctx_scale=4, answer_scale=6, variants=KV_VARIANTS),
 }
 
 # the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
@@ -157,6 +186,16 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
     out = {}
     for regime, cfg in todo:
         traces = sample_traces(dataset, cfg["k"], seed=11)
+        if cfg.get("ctx_scale") or cfg.get("answer_scale"):
+            # the migration-heavy regime stretches the sampled traces:
+            # long contexts grow the resident KV footprints, long answers
+            # keep the streams resident while PU pressure builds
+            import dataclasses as _dc
+            traces = [_dc.replace(
+                t,
+                context_tokens=t.context_tokens * cfg.get("ctx_scale", 1),
+                answer_tokens=t.answer_tokens * cfg.get("answer_scale", 1))
+                for t in traces]
         means = default_means(traces)
         cells = out[regime] = {}
         wfs = cfg["wfs"]
@@ -164,14 +203,23 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
             f"wf={'+'.join(f'w{w}' for w in wfs)}, "
             f"inter_arrival={cfg['inter_arrival']}s)")
         csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
-            "decode_rounds,widths,groups")
-        for label, kw in variants:
+            "decode_rounds,kv_migrations,kv_gb,widths,groups")
+        for label, kw in cfg.get("variants", variants):
             row = cells[label] = _variant_metrics(
                 world, means, traces, wfs, cfg["inter_arrival"], kw)
             csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
-                f"{row['decode_rounds']},{_hist(row['decode_widths'])},"
+                f"{row['decode_rounds']},{row['kv_migrations']},"
+                f"{row['kv_bytes'] / 1e9:.2f},{_hist(row['decode_widths'])},"
                 f"{_hist(row['decode_groups'])}")
+        kvm, kvc = cells.get("hero+kv"), cells.get("hero+kv-const")
+        if kvm and kvc:
+            csv(f"# {world}/{regime}: modeled migration pricing p99 "
+                f"{kvc['p99']:.2f}s -> {kvm['p99']:.2f}s "
+                f"({kvc['kv_migrations']} moves/"
+                f"{kvc['kv_bytes'] / 1e9:.2f} GB -> "
+                f"{kvm['kv_migrations']} moves/"
+                f"{kvm['kv_bytes'] / 1e9:.2f} GB)")
         if "hero+adaptive" not in cells or "hero" not in cells:
             continue
         gain = (cells["hero+adaptive"]["throughput"]
@@ -224,7 +272,10 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
     violations = []
     for regime, row in cells.items():
         fixed = row["hero+decode_batch"]["p99"]
-        for label in ("hero", "hero+decode_batch", "hero+adaptive"):
+        for label in ("hero", "hero+decode_batch", "hero+adaptive",
+                      "hero+adaptive-q", "hero+kv-const", "hero+kv"):
+            if label not in row:   # per-regime variant sets differ
+                continue
             p99 = row[label]["p99"]
             delta = (p99 / fixed - 1.0) * 100.0
             csv(f"{regime},{label},{p99:.2f},{row[label]['p50']:.2f},"
@@ -242,6 +293,13 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
             f"({mixed['hero+adaptive']['p99']:.2f}s vs "
             f"{mixed['hero+decode_batch']['p99']:.2f}s) — the regime the "
             "adaptive policy exists for")
+    mig = cells.get("migration", {})
+    kvm, kvc = mig.get("hero+kv"), mig.get("hero+kv-const")
+    if kvm and kvc and kvm["p99"] >= kvc["p99"]:
+        violations.append(
+            "migration: modeled migration pricing p99 no longer beats "
+            f"the constant ({kvm['p99']:.2f}s vs {kvc['p99']:.2f}s) — "
+            "the regime KV-residency tracking exists for")
     for v in violations:
         csv(f"# ABLATION GATE: {v}")
     if not violations:

@@ -48,6 +48,10 @@ class BackendRun:
     # (decode_width / decode_group / fused_batch) — stamped identically
     # by both substrates so policy telemetry is backend-independent
     batching: Dict[str, Dict[int, int]] = field(default_factory=dict)
+    # KV-residency totals (scheduler's tracker; zero when the subsystem
+    # is off): decode-round cache moves and the bytes they shipped
+    kv_migrations: int = 0
+    kv_bytes_moved: float = 0.0
 
 
 class Backend(Protocol):
@@ -95,7 +99,11 @@ class SimBackend:
                           redispatches=sum(1 for e in res.timeline
                                            if e[1] == "redispatch"),
                           batching={k: dict(v) for k, v in
-                                    scheduler.policy_log.items()})
+                                    scheduler.policy_log.items()},
+                          kv_migrations=(scheduler.kv.migrations
+                                         if scheduler.kv else 0),
+                          kv_bytes_moved=(scheduler.kv.bytes_moved
+                                          if scheduler.kv else 0.0))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -171,4 +179,7 @@ class LiveBackend:
             redispatches=sum(1 for e in events
                              if e[1] in ("straggler", "retry")),
             batching={k: dict(v) for k, v in
-                      scheduler.policy_log.items()})
+                      scheduler.policy_log.items()},
+            kv_migrations=scheduler.kv.migrations if scheduler.kv else 0,
+            kv_bytes_moved=(scheduler.kv.bytes_moved
+                            if scheduler.kv else 0.0))

@@ -32,6 +32,10 @@ class QueryResult:
     # token-group rounds this query's decode streams spent resident in a
     # continuous cross-query decode batch
     decode_rounds: int = 0
+    # KV-cache migrations this query's decode streams paid (resident
+    # rounds moving PU under kv_residency tracking) and the bytes shipped
+    kv_migrations: int = 0
+    kv_bytes_moved: float = 0.0
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -51,10 +55,13 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         stage_latency: Dict[str, float] = {}
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
-        coalesced = rounds = 0
+        coalesced = rounds = kv_migs = 0
+        kv_bytes = 0.0
         for n in nodes:
             if n.status != "done" or n.start < 0:
                 continue
+            kv_migs += n.payload.get("kv_migrations", 0)
+            kv_bytes += n.payload.get("kv_bytes_moved", 0.0)
             dur = n.finish - n.start
             # stage latency is wall time in the stage; PU busy is charged
             # by workload share when the node rode a fused (coalesced)
@@ -96,7 +103,8 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             makespan=finish - h.arrival_time, stage_latency=stage_latency,
             pu_busy=pu_busy, dispatches=dispatches,
             redispatches=redispatches, n_nodes=len(nodes),
-            coalesced_nodes=coalesced, decode_rounds=rounds)
+            coalesced_nodes=coalesced, decode_rounds=rounds,
+            kv_migrations=kv_migs, kv_bytes_moved=kv_bytes)
         h.result = res
         out.append(res)
     return out

@@ -31,6 +31,11 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
   profiled grids (``core/batch_policy.py``); ``"fixed"`` (the default)
   keeps the ``SchedulerConfig`` constants, bit-identical to the
   pre-adaptive scheduler.
+- ``kv_residency=True`` tracks per-stream KV-cache placement and prices
+  decode-round PU moves by the modeled migration cost (resident
+  footprint ÷ profiled link bandwidth, ``core/kv_residency.py``) instead
+  of the ``decode_migrate_cost`` constant; results then report
+  ``kv_migrations`` / ``kv_bytes_moved`` per query.
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
@@ -94,6 +99,7 @@ class HeroSession:
                  cfg_overrides: Optional[dict] = None,
                  coalesce: Optional[bool] = None,
                  batch_policy: Optional[str] = None,
+                 kv_residency: Optional[bool] = None,
                  fine_grained: Optional[bool] = None,
                  means: Optional[dict] = None,
                  pus: Optional[List[str]] = None,
@@ -109,6 +115,9 @@ class HeroSession:
         if batch_policy is not None:   # sugar for the adaptive-caps knob
             cfg_overrides = {**(cfg_overrides or {}),
                              "batch_policy": batch_policy}
+        if kv_residency is not None:   # sugar for KV-residency tracking
+            cfg_overrides = {**(cfg_overrides or {}),
+                             "kv_residency": kv_residency}
         self.cfg_overrides = cfg_overrides
         self.fine_grained = fine_grained
         self.means = means

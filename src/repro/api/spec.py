@@ -215,6 +215,14 @@ class WorkflowSpec:
                            deps=set(deps), template=template))
             if not coalescable:
                 n.payload["no_coalesce"] = True
+            if kind == "stream_decode":
+                # base KV context the stream inherits from its prefill
+                # deps — what KV-residency tracking charges before any
+                # decoded tokens (fine-grained chat decodes override this
+                # below with the full chunked context)
+                n.payload["kv_ctx"] = sum(
+                    d.nodes[dep].workload for dep in n.deps
+                    if d.nodes[dep].kind == "stream_prefill")
             return n
 
         gate = [gate_dep] if gate_dep is not None else []
@@ -294,6 +302,10 @@ class WorkflowSpec:
                          deps=[chat_state["last"]] + gate_ids,
                          template=col.chat_decode)
                 cd.payload["chat_state"] = chat_state
+                # fine-grained mode chains one prefill piece per branch:
+                # the decode's KV holds the WHOLE chunked context, not
+                # just its direct dep's piece
+                cd.payload["kv_ctx"] = int(col.context(v)) + q_tokens
             else:
                 add(dag, N(col.chat_prefill), col.chat_prefill,
                     "stream_prefill", int(col.context(v)) + q_tokens,

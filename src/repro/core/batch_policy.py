@@ -51,33 +51,93 @@ from repro.core.perf_model import LinearPerfModel
 
 
 class ArrivalTracker:
-    """EWMA of ready-pool inter-arrival times, per (stage, kind) key.
+    """Burst-aware EWMA of ready-pool inter-arrival times, per
+    (stage, kind) key.
 
     The scheduler observes every node the moment it first enters the
     ready pool (decode residents re-entering at a token-group boundary
     count too: a rejoining stream IS the next member a forming batch
     would wait for).  ``tau`` is the policy's queueing-delay estimate for
     "one more member".
+
+    *Fresh* arrivals landing at the same scheduling instant are a
+    *burst* — a W2 rewriter releasing 4 sub-queries at once spawns 4
+    streams whose first ready-pool entries share one timestamp.  A plain
+    gap EWMA aliases such a burst as one arrival — one inter-arrival gap
+    for b members — so the width-beyond-ready decision mis-estimates the
+    per-member arrival rate by ~b×.  Two estimates are therefore kept:
+
+    - :meth:`tau` — burst-corrected *per-member* inter-arrival:
+      ``EWMA(gap) / EWMA(batch size)`` over fresh-burst-deduplicated
+      arrival events.  What the decode width cap compares marginal
+      per-member gains against — one arrival event repays the wait with
+      the whole burst's worth of members.
+    - :meth:`tau_event` — the PR 4 raw gap EWMA (every observation, zero
+      gaps included).  What the coalesce *window* consumes: it bounds
+      how long a fused dispatch may hold a PU before the next
+      *newcomer* starves behind it, and a burst's latecomers starve
+      together, not b× faster.
+
+    Singleton arrivals make both estimates identical to the PR 4 one
+    (batch EWMA pinned at 1).  Decode residents *re-entering* at a
+    token-group boundary count as individual arrivals (``fresh=False``)
+    exactly as before — a re-fusing batch's own boundary is not
+    evidence about how fast new members show up.
     """
 
     def __init__(self, alpha: float = 0.3):
         self.alpha = alpha
         self._last: Dict[Tuple[str, str], float] = {}
-        self._tau: Dict[Tuple[str, str], float] = {}
+        # fresh members that arrived at _last's instant, not yet flushed
+        # into the batch EWMA (a burst closes when a later observation
+        # lands)
+        self._pending: Dict[Tuple[str, str], int] = {}
+        self._gap: Dict[Tuple[str, str], float] = {}
+        self._batch: Dict[Tuple[str, str], float] = {}
+        self._tau_event: Dict[Tuple[str, str], float] = {}
 
-    def observe(self, key: Tuple[str, str], now: float) -> None:
+    def observe(self, key: Tuple[str, str], now: float,
+                fresh: bool = True) -> None:
         last = self._last.get(key)
-        self._last[key] = now
         if last is None:
+            self._last[key] = now
+            self._pending[key] = 1
             return
+        a = self.alpha
+        # event estimate: every observation, zero gaps included (the
+        # PR 4 estimator, bit-for-bit)
         gap = max(now - last, 0.0)
-        prev = self._tau.get(key)
-        self._tau[key] = (gap if prev is None
-                          else (1 - self.alpha) * prev + self.alpha * gap)
+        prev_e = self._tau_event.get(key)
+        self._tau_event[key] = (gap if prev_e is None
+                                else (1 - a) * prev_e + a * gap)
+        if fresh and now <= last:
+            # same scheduling instant, new stream: the burst grows; the
+            # per-member estimate records no gap yet
+            self._pending[key] = self._pending.get(key, 1) + 1
+            self._last[key] = now
+            return
+        batch = float(self._pending.get(key, 1))
+        prev_g = self._gap.get(key)
+        self._gap[key] = gap if prev_g is None else (1 - a) * prev_g + a * gap
+        prev_b = self._batch.get(key)
+        self._batch[key] = (batch if prev_b is None
+                            else (1 - a) * prev_b + a * batch)
+        self._last[key] = now
+        self._pending[key] = 1
 
     def tau(self, key: Tuple[str, str]) -> Optional[float]:
-        """EWMA mean inter-arrival for ``key`` (None until 2 arrivals)."""
-        return self._tau.get(key)
+        """Burst-corrected EWMA mean *per-member* inter-arrival for
+        ``key`` (None until 2 distinct arrival instants)."""
+        gap = self._gap.get(key)
+        if gap is None:
+            return None
+        return gap / max(self._batch.get(key, 1.0), 1.0)
+
+    def tau_event(self, key: Tuple[str, str]) -> Optional[float]:
+        """Raw per-observation gap EWMA (None until 2 observations) —
+        the PR 4 estimator, kept for the coalesce-window fairness
+        bound."""
+        return self._tau_event.get(key)
 
 
 class FixedBatchPolicy:
@@ -87,9 +147,13 @@ class FixedBatchPolicy:
 
     name = "fixed"
 
-    def __init__(self, cfg, perf: LinearPerfModel):
+    def __init__(self, cfg, perf: LinearPerfModel, kv=None):
         self.cfg = cfg
         self.perf = perf
+        # KV-residency tracker (core/kv_residency.py) when the scheduler
+        # runs with it: lets the adaptive width cap price residency from
+        # the batch's measured state instead of a fixed-width probe
+        self.kv = kv
 
     # -- caps / windows ----------------------------------------------------
     def decode_width_cap(self, stage: str, prefer_pu: Optional[str],
@@ -119,8 +183,8 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
 
     name = "adaptive"
 
-    def __init__(self, cfg, perf: LinearPerfModel):
-        super().__init__(cfg, perf)
+    def __init__(self, cfg, perf: LinearPerfModel, kv=None):
+        super().__init__(cfg, perf, kv)
         self._pus: List[str] = sorted({pu for (_s, pu) in perf.coef})
         self._cap_cache: Dict[Tuple[str, str], int] = {}
         self._anchor_cache: Dict[str, Optional[str]] = {}
@@ -196,6 +260,13 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
         horizon = (sum(remainders) / len(remainders) if remainders
                    else default_horizon)
         rounds = max(float(ceil_passes(int(horizon), group)), 1.0)
+        if self.kv is not None and remainders:
+            # KV residency tracked: price the wait against the batch's
+            # *measured* residency — a round at the candidates' actual
+            # width, not the width-2 probe (the footprint the tracker
+            # holds is exactly this width's worth of resident caches)
+            p_round = self.perf.p0_decode(stage, pu,
+                                          max(len(remainders), 2), group)
         threshold = 0.0
         if tau is not None:
             threshold = max(tau - rounds * p_round, 0.0) / rounds
@@ -284,19 +355,34 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
             cands.add(below[-1] if below else grid[0])
         return sorted(min(g, max(node.workload, 1)) for g in cands)
 
-    def round_passes(self, node: Node, batch: int) -> float:
-        """Mean member completion in rounds at group ``batch``: Σ⌈rᵢ/g⌉/w.
+    # completion quantile the "quantile" round scoring charges (p99-aware:
+    # with ≤ 8 residents this is the slowest member, the tail the mixed
+    # sparse-arrival regime loses on)
+    ROUND_QUANTILE = 0.9
 
-        The fixed policy charges the *longest* member's horizon to every
-        candidate, which pads ragged tails; weighting by each resident's
-        own remainder makes a group that releases short members at the
-        next boundary score exactly as much better as the latency it
-        reclaims.
-        """
+    def round_passes(self, node: Node, batch: int) -> float:
+        """Member completion in rounds at group ``batch``.
+
+        ``round_score="mean"`` (default): Σ⌈rᵢ/g⌉/w — the fixed policy
+        charges the *longest* member's horizon to every candidate, which
+        pads ragged tails; weighting by each resident's own remainder
+        makes a group that releases short members at the next boundary
+        score exactly as much better as the latency it reclaims.
+
+        ``round_score="quantile"``: a high quantile
+        (:data:`ROUND_QUANTILE`) of the member completions instead — the
+        p99-aware variant: optimizing the mean trades the slowest
+        member's finish for early leaves, exactly the mixed@2.0 p99 gap;
+        scoring the tail keeps groups aligned to the members that define
+        it."""
         rem = self._remainders(node)
         if rem is None:
             return ceil_passes(node.workload, batch)
-        return sum(ceil_passes(r, batch) for r in rem) / len(rem)
+        passes = sorted(ceil_passes(r, batch) for r in rem)
+        if getattr(self.cfg, "round_score", "mean") == "quantile":
+            k = min(int(self.ROUND_QUANTILE * len(passes)), len(passes) - 1)
+            return float(passes[k])
+        return sum(passes) / len(passes)
 
     @staticmethod
     def _remainders(node: Node) -> Optional[List[int]]:
@@ -313,10 +399,15 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
         return sorted(m.workload for m in members)
 
 
-def make_policy(cfg, perf: LinearPerfModel):
-    """Resolve ``SchedulerConfig.batch_policy`` to a policy object."""
+def make_policy(cfg, perf: LinearPerfModel, kv=None):
+    """Resolve ``SchedulerConfig.batch_policy`` to a policy object
+    (``kv``: the scheduler's KV-residency tracker, when enabled)."""
     kinds = {"fixed": FixedBatchPolicy, "adaptive": AdaptiveBatchPolicy}
     name = getattr(cfg, "batch_policy", "fixed")
     if name not in kinds:
         raise KeyError(f"batch_policy {name!r}; pick from {sorted(kinds)}")
-    return kinds[name](cfg, perf)
+    score = getattr(cfg, "round_score", "mean")
+    if score not in ("mean", "quantile"):
+        raise KeyError(f"round_score {score!r}; pick from "
+                       f"['mean', 'quantile']")
+    return kinds[name](cfg, perf, kv)

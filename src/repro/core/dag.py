@@ -22,6 +22,23 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 PENDING, READY, RUNNING, DONE = "pending", "ready", "running", "done"
 
 
+def resolve_prefer_pu(kv, members: Sequence["Node"]) -> Optional[str]:
+    """The PU a forming decode round should anchor to, from its members'
+    ``batch_pu`` history — THE shared resolution: ``fuse_decode`` stamps
+    it on the round and the scheduler derives the width cap at it, so
+    the two must agree.  Agreement short-circuits (the legacy path);
+    conflicting history is resolved by the KV-residency tracker (largest
+    resident footprint, deterministic tie-breaks) when one is attached,
+    with a smallest-name guard should the tracker ever abstain; without
+    a tracker a conflict yields no preference, exactly as before."""
+    prev = {m.payload.get("batch_pu") for m in members} - {None}
+    if len(prev) == 1:
+        return next(iter(prev))
+    if prev and kv is not None:
+        return kv.prefer_pu(members) or min(prev)
+    return None
+
+
 @dataclass
 class Node:
     id: str
@@ -50,6 +67,11 @@ class DynamicDAG:
         self.nodes: Dict[str, Node] = {}
         self._succ: Dict[str, Set[str]] = {}
         self._ids = itertools.count()
+        # KV-residency tracker (core/kv_residency.py), attached by the
+        # scheduler when SchedulerConfig.kv_residency is on: decode-round
+        # boundaries report served tokens / leaves to it, and fuse_decode
+        # consults it to anchor rounds with conflicting batch_pu history
+        self.kv = None
 
     # -- construction -------------------------------------------------------
     def add(self, node: Node) -> Node:
@@ -123,6 +145,17 @@ class DynamicDAG:
         if n.expander is not None:
             n.expander(self, n)
             n.expander = None
+        if (self.kv is not None and n.kind == "stream_decode"
+                and not n.payload.get("decode_round")
+                and "members" not in n.payload):
+            # a finished decode piece with no continuation (no rest
+            # sibling of the same stream) ends its stream: free the KV
+            # footprint so long-lived serving does not accumulate ghosts
+            skey = n.group or n.id
+            if not any(s.kind == "stream_decode"
+                       and (s.group or s.id) == skey
+                       for s in self.successors(nid)):
+                self.kv.on_boundary(n, "", 0, left=True)
         for s in self._succ.get(nid, ()):
             self._refresh_status(self.nodes[s])
         if n.payload.get("decode_round") and not self._succ.get(nid):
@@ -162,9 +195,9 @@ class DynamicDAG:
                                                   for m in members)})
         # KV caches of a resident batch live on the PU that served the
         # previous round; the scheduler charges migration when moving
-        prev_pus = {m.payload.get("batch_pu") for m in members} - {None}
-        if len(prev_pus) == 1:
-            fused.payload["prefer_pu"] = next(iter(prev_pus))
+        prefer = resolve_prefer_pu(self.kv, members)
+        if prefer is not None:
+            fused.payload["prefer_pu"] = prefer
         for m in members:
             m.status = RUNNING
             m.payload["fused_into"] = fused.id
@@ -191,6 +224,11 @@ class DynamicDAG:
             m.payload["last_slice"] = s
             m.payload["decode_rounds"] = m.payload.get("decode_rounds", 0) + 1
             m.payload["decode_served"] = m.payload.get("decode_served", 0) + s
+            if self.kv is not None and n.config is not None:
+                # residency boundary event: the member's cache grew by the
+                # served slice on the round's PU; leavers free theirs
+                self.kv.on_boundary(m, n.config[0], s,
+                                    left=(s >= m.workload))
             if n.config is not None:
                 # PU occupancy charged by live membership: workload share of
                 # this round's residency

@@ -161,6 +161,14 @@ class StageModel:
     bytes_per_param: float = 1.0   # INT8
     # batchable: per-item token count; streaming: tokens handled elsewhere
     item_tokens: int = 128
+    # KV-cache bytes appended per token (2 · layers · kv_heads · head_dim ·
+    # bytes for a GQA transformer); 0 selects the d_model fallback below —
+    # what KV-residency tracking and the migration-cost model charge
+    kv_bytes_token: float = 0.0
+
+    def kv_bytes_per_token(self) -> float:
+        """Bytes of K+V cache one context token occupies on its PU."""
+        return self.kv_bytes_token or 2.0 * self.d_model * self.bytes_per_param
 
     def flops(self, n_items: int, tokens: Optional[int] = None) -> float:
         t = tokens if tokens is not None else n_items * self.item_tokens
@@ -280,6 +288,26 @@ class GroundTruthPerf:
             by = stage.bytes_moved(c.batch, tokens)
         return by / max(t, 1e-9)
 
+    def link_bandwidth(self, src: PU, dst: PU) -> float:
+        """Effective KV-copy bandwidth between two PUs (bytes/s).
+
+        On a unified-memory SoC a cache migration is a read at the source
+        PU's DMA rate followed by a write at the destination's, both over
+        the shared bus — the harmonic combination, never above the bus
+        itself.  TPU slices pay the inter-slice fabric the same way."""
+        eff = 1.0 / (1.0 / src.mem_bw + 1.0 / dst.mem_bw)
+        return min(eff, self.soc.dram_bw)
+
+    def migrate_cost(self, stage: StageModel, src: PU, dst: PU,
+                     ctx_tokens: int) -> float:
+        """Seconds to move ``ctx_tokens`` of ``stage``'s KV cache from
+        ``src`` to ``dst`` (uncontended; the bus contention multiplier is
+        applied by the caller, like every other p0)."""
+        if src.name == dst.name:
+            return 0.0
+        by = stage.kv_bytes_per_token() * max(ctx_tokens, 0)
+        return by / self.link_bandwidth(src, dst) + dst.overhead
+
     def phi(self, stage: StageModel, B: float) -> float:
         """Contention slowdown φ_v(B) ≥ 1 (Eq. 1)."""
         soc = self.soc
@@ -315,6 +343,14 @@ class LinearPerfModel:
                                      Tuple[float, float]]] = {}
         self.decode_coef: Dict[Tuple[str, str], np.ndarray] = {}
         self.decode_bw_coef: Dict[Tuple[str, str], np.ndarray] = {}
+        # KV-migration profile (decode stages): (stage, src_pu, dst_pu) ->
+        # (intercept, seconds-per-context-token) fitted over MIGRATE_CTX —
+        # what prices a resident decode batch moving PU, replacing the
+        # decode_migrate_cost constant (footprint / PU-pair link bandwidth)
+        self.migrate_coef: Dict[Tuple[str, str, str], Tuple[float, float]] = {}
+        # per-stage KV bytes per context token (copied exactly from the
+        # profiled StageModels) — the residency tracker's footprint unit
+        self.kv_bytes: Dict[str, float] = {}
 
     @staticmethod
     def _feats(n: np.ndarray, tile: int) -> np.ndarray:
@@ -376,7 +412,44 @@ class LinearPerfModel:
             self.phi_coef[sname] = np.linalg.lstsq(Xp, phis, rcond=None)[0]
         self._tiles = {pu.name: pu.tile for pu in gt.soc.pus}
         self._b0 = gt.soc.dram_bw
+        # KV-migration grid, after every latency fit so the noise rng
+        # stream is untouched: migration is a bulk copy, linear in bytes,
+        # so the ctx-grid samples pin an exact (intercept, slope) line per
+        # (decode stage, PU pair)
+        for sname, stage in gt.stages.items():
+            if stage.kind != "stream_decode":
+                continue
+            self.kv_bytes[sname] = stage.kv_bytes_per_token()
+            pus = [p for p in gt.soc.pus if gt.supported(stage, p)]
+            ctx = np.asarray(self.MIGRATE_CTX, dtype=np.float64)
+            X = np.stack([np.ones_like(ctx), ctx], axis=-1)
+            for src in pus:
+                for dst in pus:
+                    if src.name == dst.name:
+                        continue
+                    ys = [gt.migrate_cost(stage, src, dst, int(c))
+                          for c in ctx]
+                    a, b = np.linalg.lstsq(X, np.array(ys), rcond=None)[0]
+                    self.migrate_coef[(sname, src.name, dst.name)] = (
+                        float(a), float(b))
         return self
+
+    # context-length grid the migration-cost line is sampled on (tokens)
+    MIGRATE_CTX = (256, 1024, 4096, 16384)
+
+    def migrate_cost(self, stage: str, src_pu: str, dst_pu: str,
+                     ctx_tokens: int) -> Optional[float]:
+        """Modeled seconds to move a ``ctx_tokens``-context KV cache of
+        ``stage`` from ``src_pu`` to ``dst_pu`` (the fitted footprint ÷
+        link-bandwidth line).  ``None`` when this profile predates the
+        migration grid or the pair was never profiled — callers fall back
+        to ``SchedulerConfig.decode_migrate_cost``."""
+        if src_pu == dst_pu:
+            return 0.0
+        co = self.migrate_coef.get((stage, src_pu, dst_pu))
+        if co is None:
+            return None
+        return max(co[0] + co[1] * max(ctx_tokens, 0), 0.0)
 
     # decode-batching profile grid: widths × token groups (width 1 lives in
     # the ordinary table; the scheduler's group candidates are clipped to
@@ -429,6 +502,9 @@ class LinearPerfModel:
             "decode_table": {f"{s}|{p}": {f"{w},{g}": v
                                           for (w, g), v in tab.items()}
                              for (s, p), tab in self.decode_table.items()},
+            "migrate_coef": {f"{s}|{a}|{b}": list(v) for (s, a, b), v in
+                             self.migrate_coef.items()},
+            "kv_bytes": dict(self.kv_bytes),
             "tiles": self._tiles, "b0": self._b0,
         }
         with open(path, "w") as f:
@@ -458,6 +534,11 @@ class LinearPerfModel:
             tuple(k.split("|")): {tuple(int(x) for x in wg.split(",")):
                                   tuple(v) for wg, v in tab.items()}
             for k, tab in blob.get("decode_table", {}).items()}
+        # KV-migration profile (absent in pre-residency profile files:
+        # migrate_cost then returns None and callers keep the constant)
+        m.migrate_coef = {tuple(k.split("|")): tuple(v)
+                          for k, v in blob.get("migrate_coef", {}).items()}
+        m.kv_bytes = dict(blob.get("kv_bytes", {}))
         m._tiles = blob["tiles"]
         m._b0 = blob["b0"]
         return m

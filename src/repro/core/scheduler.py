@@ -29,7 +29,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core import concurrency as cc
 from repro.core import criticality as crit
 from repro.core.batch_policy import ArrivalTracker, make_policy
-from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
+from repro.core.dag import (DynamicDAG, Node, WorkflowTemplate,
+                            resolve_prefer_pu)
+from repro.core.kv_residency import KVResidency
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     shape_aware_configs)
 from repro.core.perf_model import LinearPerfModel
@@ -65,8 +67,28 @@ class SchedulerConfig:
     # max resident sequences per decode batch (profiled width grid top)
     decode_batch_cap: int = 8
     # seconds charged when a resident batch's next round moves PU (KV-cache
-    # migration); keeps batches sticky per (stage, PU) unless moving wins
+    # migration); keeps batches sticky per (stage, PU) unless moving wins.
+    # The legacy constant — superseded by the modeled cost when
+    # ``kv_residency`` is on, and the fallback when a loaded profile
+    # predates the migration grid
     decode_migrate_cost: float = 0.01
+    # per-stream KV-residency tracking (core/kv_residency.py): decode-round
+    # PU moves are priced by the modeled migration cost (resident footprint
+    # ÷ profiled PU-pair link bandwidth, φ-scaled) instead of the constant
+    # above, and both backends register/charge the migrations
+    # (kv_migrations / kv_bytes_moved in results).  Off = the legacy
+    # constant and free migration physics, bit-identical to the
+    # PR 2/3/4 goldens.
+    kv_residency: bool = False
+    # migration pricing under kv_residency: "modeled" (footprint ÷ link
+    # bandwidth) or "constant" (keep the legacy constant while still
+    # tracking and charging real transfers — the mischarging baseline the
+    # migration-heavy bench regime pits the model against)
+    migrate_pricing: str = "modeled"
+    # decode-round scoring under the adaptive policy: "mean" member
+    # completion (PR 4) or "quantile" (p99-aware: score by a high quantile
+    # of member completion, targeting the mixed sparse-arrival tail)
+    round_score: str = "mean"
     # batching-cap policy: "fixed" uses the three constants above verbatim
     # (bit-identical to the pre-adaptive scheduler, pinned against
     # committed goldens); "adaptive" derives coalesce/decode caps, the
@@ -97,9 +119,15 @@ class HeroScheduler:
         self.template = template
         self._fifo_seq: Dict[str, int] = {}
         self._seq = 0
+        if self.cfg.migrate_pricing not in ("modeled", "constant"):
+            raise KeyError(f"migrate_pricing {self.cfg.migrate_pricing!r}; "
+                           f"pick from ['modeled', 'constant']")
+        # KV-residency tracker: per-stream cache placement + footprints,
+        # shared with the DAG (boundary events) and the batching policy
+        self.kv = KVResidency(perf) if self.cfg.kv_residency else None
         # batching policy (fixed constants vs online derivation from the
         # profiled grids) + the ready-pool inter-arrival EWMA it consults
-        self.policy = make_policy(self.cfg, perf)
+        self.policy = make_policy(self.cfg, perf, kv=self.kv)
         self.arrivals = ArrivalTracker()
         # last-seen decode_rounds per resident id: detects boundary
         # re-entries (same node id, another ready-pool arrival)
@@ -130,6 +158,9 @@ class HeroScheduler:
         (the paper's "each stage executes on a single PU" default emerges
         from this, with migration only when genuinely beneficial)."""
         cfgn = self.cfg
+        if self.kv is not None and dag.kv is not self.kv:
+            # let decode-round boundaries and fuse_decode reach the tracker
+            dag.kv = self.kv
         crit.update_criticality(dag, self.perf, self.template, now,
                                 beta=cfgn.beta if cfgn.enable_criticality
                                 else 0.0)                       # line 4
@@ -163,7 +194,11 @@ class HeroScheduler:
                 # continuous serving
                 self._seen_rounds[n.id] = n.payload.get("decode_rounds", 0)
                 if n.kind != "io":
-                    self.arrivals.observe((n.stage, n.kind), now)
+                    # boundary re-entry: a real arrival (tau must not
+                    # freeze) but NOT a fresh-burst member — the batch's
+                    # own boundary says nothing about new-stream rate
+                    self.arrivals.observe((n.stage, n.kind), now,
+                                          fresh=False)
         fused_new = self._coalesce(dag) if cfgn.coalesce else []
         # Eq. 5 protects a single query's critical path — the right
         # objective in the paper's one-query-at-a-time regime.  A fused
@@ -266,7 +301,20 @@ class HeroScheduler:
                         self.perf, gate_star, b, B_now, now
                     ) if (cfgn.enable_concurrency and is_idle) else 0.0
                     score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
-                    if width > 1 and prefer_pu is not None and pu != prefer_pu:
+                    if self.kv is not None:
+                        # migration priced per stream from tracked
+                        # residency — rounds AND solo token-group chains
+                        # (which the legacy constant never priced and
+                        # which hop PUs freely without it).  f_cand
+                        # already amortizes over the remaining horizon,
+                        # so the one-off transfer is weighed against the
+                        # whole stay: work migrates exactly when the
+                        # destination's latency win repays the copy.
+                        if v_cand.kind == "stream_decode":
+                            score += self._migrate_score(v_cand, pu,
+                                                         B_now + b)
+                    elif (width > 1 and prefer_pu is not None
+                          and pu != prefer_pu):
                         score += cfgn.decode_migrate_cost
                     d = Dispatch(v_cand, pu, batch, p0, b)
                     if best is None or score < best[0]:
@@ -358,12 +406,15 @@ class HeroScheduler:
             # blocking fusion of the smaller nodes behind them.
             nodes.sort(key=lambda n: -n.criticality)
             stage = nodes[0].stage
-            tau = self.arrivals.tau((stage, kind))
             if kind == "stream_decode":
-                # KV residency: the cap is derived at the PU holding the
-                # previous round's caches when the candidates agree on one
-                prev = {n.payload.get("batch_pu") for n in nodes} - {None}
-                prefer = next(iter(prev)) if len(prev) == 1 else None
+                # width-beyond-ready compares per-member marginal gains,
+                # so it needs the burst-corrected per-member rate
+                tau = self.arrivals.tau((stage, kind))
+                # KV residency: the cap is derived at the PU the forming
+                # round will anchor to (same resolution fuse_decode
+                # stamps: agreement, or the largest tracked footprint
+                # under conflicting history)
+                prefer = resolve_prefer_pu(self.kv, nodes)
                 cap = self.policy.decode_width_cap(
                     stage, prefer, tau, [n.workload for n in nodes])
                 if self.policy.name == "adaptive":
@@ -376,6 +427,10 @@ class HeroScheduler:
                     continue
                 fused = dag.fuse_decode(take)
             else:
+                # the window bounds occupancy until the next arrival
+                # *event* (a burst's latecomers starve together, not b×
+                # faster), so it keeps the raw gap estimate
+                tau = self.arrivals.tau_event((stage, kind))
                 window = self.policy.coalesce_window(stage, tau)
                 take = []
                 total = 0
@@ -393,6 +448,24 @@ class HeroScheduler:
         return created
 
     # -- helpers -------------------------------------------------------------
+    def _migrate_score(self, node: Node, pu: str, B: float) -> float:
+        """Eq. 5 addend for serving round ``node`` on ``pu`` given tracked
+        KV residency: the modeled transfer cost of every member whose
+        cache lives elsewhere (φ-scaled — the copy rides the shared bus),
+        or the legacy constant under ``migrate_pricing="constant"`` / a
+        profile without the migration grid."""
+        pen = self.kv.migrate_penalty(node, pu, B)
+        if pen is None:                  # pre-residency profile: no grid
+            prefer = node.payload.get("prefer_pu")
+            return (self.cfg.decode_migrate_cost
+                    if prefer is not None and pu != prefer else 0.0)
+        moving, cost = pen
+        if moving == 0:
+            return 0.0
+        if self.cfg.migrate_pricing == "constant":
+            return self.cfg.decode_migrate_cost
+        return cost
+
     def _log_choice(self, node: Node, batch: int) -> None:
         """Chosen-shape telemetry: resident width + token group per decode
         round, merged batch per fused dispatch (what the serving benchmark
@@ -469,7 +542,7 @@ class HeroScheduler:
                     group=node.group or node.id, payload=dict(node.payload))
         for k in ("pu_busy_acc", "decode_served", "decode_total",
                   "decode_rounds", "last_slice", "coalesced", "batch_pu",
-                  "round_final"):
+                  "round_final", "kv_migrations", "kv_bytes_moved"):
             rest.payload.pop(k, None)   # batch accounting is per-node
         node.workload = n
         node.group = node.group or node.id

@@ -208,6 +208,19 @@ class Simulator:
             passes = ceil_passes(d.node.workload, d.batch)
             work = passes * self.gt.p0(stage, pu, c)
             bw = self.gt.bandwidth(stage, pu, c)
+            if (d.node.kind == "stream_decode"
+                    and self.sched.kv is not None):
+                # KV migration is real physics once residency is tracked:
+                # streams (round members or a solo token-group chain)
+                # whose caches live on another PU pay the ground-truth
+                # transfer before the first step (contention scales it
+                # like the rest of the work)
+                for m, src, ctx, _by in self.sched.kv.migrate_for_dispatch(
+                        d.node, d.pu):
+                    work += self.gt.migrate_cost(
+                        self.gt.stages[m.stage], self.gt.soc.pu(src), pu,
+                        ctx)
+                    self._note(timeline, now, "kv_migrate", m)
         # fault injection (admission timers are control nodes — a gated
         # arrival must stay exact under injected faults)
         is_timer = d.node.payload.get("arrival") is not None

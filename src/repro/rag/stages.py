@@ -8,9 +8,18 @@ from repro.configs import ModelConfig
 from repro.core.perf_model import StageModel
 
 
+def _kv_bytes_token(cfg: ModelConfig, bytes_per_param: float = 1.0) -> float:
+    """K+V cache bytes per context token (GQA): 2 · layers · kv_heads ·
+    head_dim · bytes — what KV-residency tracking and the migration-cost
+    model charge per resident token."""
+    return (2.0 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim
+            * bytes_per_param)
+
+
 def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
     e, r = family["embed"], family["rerank"]
     s, c = family["search"], family["chat"]
+    kv_s, kv_c = _kv_bytes_token(s), _kv_bytes_token(c)
     return {
         "embed": StageModel("embed", e.param_count(), e.d_model,
                             "batchable", item_tokens=128),
@@ -20,19 +29,23 @@ def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
         "rewrite_prefill": StageModel("rewrite_prefill", s.param_count(),
                                       s.d_model, "stream_prefill"),
         "rewrite_decode": StageModel("rewrite_decode", s.param_count(),
-                                     s.d_model, "stream_decode"),
+                                     s.d_model, "stream_decode",
+                                     kv_bytes_token=kv_s),
         "plan_prefill": StageModel("plan_prefill", s.param_count(),
                                    s.d_model, "stream_prefill"),
         "plan_decode": StageModel("plan_decode", s.param_count(),
-                                  s.d_model, "stream_decode"),
+                                  s.d_model, "stream_decode",
+                                  kv_bytes_token=kv_s),
         "refine_prefill": StageModel("refine_prefill", c.param_count(),
                                      c.d_model, "stream_prefill"),
         "refine_decode": StageModel("refine_decode", c.param_count(),
-                                    c.d_model, "stream_decode"),
+                                    c.d_model, "stream_decode",
+                                    kv_bytes_token=kv_c),
         "chat_prefill": StageModel("chat_prefill", c.param_count(),
                                    c.d_model, "stream_prefill"),
         "chat_decode": StageModel("chat_decode", c.param_count(),
-                                  c.d_model, "stream_decode"),
+                                  c.d_model, "stream_decode",
+                                  kv_bytes_token=kv_c),
         "web": StageModel("web", 0, 0, "io"),
     }
 

@@ -259,6 +259,14 @@ class HeroRuntime:
         if d.pu == "io" or fn is None:
             fn = self.stage_fns.get("__io__", lambda n, b: None)
         task = _Task(d.node, d.batch, fn)
+        if d.node.kind == "stream_decode" and self.sched.kv is not None:
+            # same registration the simulator does at dispatch start, so
+            # kv_migrations / bytes-moved accounting is backend-independent
+            # (wall-clock transfer cost is the stage fn's to pay — here it
+            # is recorded, not slept)
+            for m, _src, _ctx, _by in self.sched.kv.migrate_for_dispatch(
+                    d.node, d.pu):
+                self._emit(now_t, "kv_migrate", m)
         if d.node.status != "running":
             dag.mark_running(d.node.id, now_t, (d.pu, d.batch))
         if d.pu == "io":

@@ -182,6 +182,64 @@ def test_arrival_tracker_ewma():
     tr.observe(key, 4.0)                # gap 1.0 -> ewma 1.5
     assert tr.tau(key) == pytest.approx(1.5)
     assert tr.tau(("other", "stream_decode")) is None
+    # singleton arrivals: both estimates coincide (the PR 4 estimator)
+    assert tr.tau_event(key) == pytest.approx(1.5)
+
+
+def test_arrival_tracker_burst_dealiasing():
+    """A W2 rewriter releasing 4 sub-queries at once is ONE arrival
+    event of batch size 4: the per-member estimate converges to gap/4
+    instead of aliasing the burst as a single arrival."""
+    tr = ArrivalTracker(alpha=0.5)
+    key = ("refine_decode", "stream_decode")
+    t = 0.0
+    for _ in range(12):                 # bursts of 4 every 10 s
+        for _ in range(4):
+            tr.observe(key, t)
+        t += 10.0
+    assert tr.tau(key) == pytest.approx(10.0 / 4, rel=0.05)
+    # the event estimate keeps the raw view the coalesce window needs:
+    # zero gaps inside the burst pull it far below the 10 s event gap
+    assert tr.tau_event(key) < 10.0
+
+
+def test_arrival_tracker_interleaved_reentries_keep_ratio_sane():
+    """A boundary re-entry landing between a fresh burst and its closing
+    gap flushes the burst early — but tau is a RATIO of marginal EWMAs
+    (mean gap / mean batch), which pairing cannot bias: with 4-member
+    bursts every 10 s plus one re-entry 0.5 s after each, the true
+    per-member inter-arrival is 10/5 = 2 s and the estimate stays on
+    that order instead of collapsing toward the re-entry gap."""
+    tr = ArrivalTracker(alpha=0.3)
+    key = ("chat_decode", "stream_decode")
+    t = 0.0
+    for _ in range(30):
+        for _ in range(4):
+            tr.observe(key, t)
+        tr.observe(key, t + 0.5, fresh=False)
+        t += 10.0
+    assert 1.0 < tr.tau(key) < 3.0
+    # and the event estimate still reflects raw observation gaps
+    assert tr.tau_event(key) < tr.tau(key) * 4
+
+
+def test_arrival_tracker_reentries_stay_individual():
+    """Decode residents re-entering at a boundary (fresh=False) keep the
+    PR 4 semantics bit-for-bit: zero-gap observations, no burst batch."""
+    new = ArrivalTracker(alpha=0.3)
+    key = ("chat_decode", "stream_decode")
+    times = [0.0, 2.0, 2.0, 2.0, 5.0, 5.0, 9.0]
+    legacy_tau = None
+    last = None
+    for t in times:
+        new.observe(key, t, fresh=False)
+        if last is not None:
+            gap = max(t - last, 0.0)
+            legacy_tau = (gap if legacy_tau is None
+                          else 0.7 * legacy_tau + 0.3 * gap)
+        last = t
+    assert new.tau(key) == pytest.approx(legacy_tau)
+    assert new.tau_event(key) == pytest.approx(legacy_tau)
 
 
 # --- per-round group selection (horizon policy) -------------------------------
@@ -217,6 +275,22 @@ def test_round_passes_mean_completion_vs_fixed_horizon():
     # mean over member remainders: (1 + 1 + 4) / 3
     assert AdaptiveBatchPolicy.round_passes(ada, node, 16) \
         == pytest.approx(2.0)
+
+
+def test_round_passes_quantile_scores_the_tail():
+    """round_score="quantile": the p99-aware variant charges a high
+    quantile of member completion — the slowest member at small widths —
+    instead of the mean an early leaver can hide behind."""
+    node = _round_node([4, 16, 64])
+    ada = AdaptiveBatchPolicy.__new__(AdaptiveBatchPolicy)
+    ada.cfg = SchedulerConfig(round_score="quantile")
+    assert AdaptiveBatchPolicy.round_passes(ada, node, 16) == 4.0
+    ada.cfg = SchedulerConfig(round_score="mean")
+    assert AdaptiveBatchPolicy.round_passes(ada, node, 16) \
+        == pytest.approx(2.0)
+    with pytest.raises(KeyError):
+        make_policy(SchedulerConfig(round_score="p42"),
+                    synthetic_perf({1: 1.0, 2: 0.5}))
 
 
 def test_dispatch_passes_round_serves_one_group():

@@ -1,0 +1,362 @@
+"""KV-residency subsystem (the PR 5 tentpole).
+
+Covers the ISSUE's required invariants: footprint accounting across
+join / boundary / leave / re-fuse, migration-cost monotonicity in
+context length (and agreement with the ground truth on the profiled
+grid), deterministic prefer-PU resolution under conflicting batch_pu
+history, sim/live parity of the kv_migrations accounting, bit-exactness
+of the legacy goldens with the subsystem disabled, and a hypothesis
+property (total bytes charged == the sum of footprints at each
+migration, reconstructed from boundary deltas).
+"""
+import json
+import os
+
+import pytest
+
+from repro.api import HeroSession
+from repro.api.session import make_world
+from repro.core import SchedulerConfig
+from repro.core.dag import DynamicDAG, Node
+from repro.core.kv_residency import KVResidency, stream_key
+from repro.core.perf_model import LinearPerfModel
+from repro.core.scheduler import HeroScheduler
+from repro.rag import default_means, sample_traces
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+
+@pytest.fixture(scope="module")
+def world():
+    return make_world("sd8gen4", "qwen3")
+
+
+@pytest.fixture()
+def perf(world):
+    return world[2]
+
+
+def synthetic_perf(kv_bytes=100.0, sec_per_tok=1e-3, stage="chat_decode",
+                   pus=("cpu", "gpu", "npu")):
+    """A LinearPerfModel with a handcrafted migration profile."""
+    m = LinearPerfModel()
+    m._tiles = {p: 8 for p in pus}
+    m._b0 = 1e9
+    m.kv_bytes = {stage: kv_bytes}
+    m.phi_coef = {stage: [1.0, 0.0, 0.0]}     # φ ≡ 1
+    for a in pus:
+        for b in pus:
+            if a != b:
+                m.migrate_coef[(stage, a, b)] = (0.0, sec_per_tok)
+    return m
+
+
+def decode_node(nid, ctx=100, workload=64, stage="chat_decode", **payload):
+    return Node(id=nid, stage=stage, kind="stream_decode",
+                workload=workload, payload={"kv_ctx": ctx, **payload})
+
+
+# --- migration-cost model -----------------------------------------------------
+
+def test_migrate_cost_monotone_in_context(perf):
+    pairs = {(s, a, b) for (s, a, b) in perf.migrate_coef}
+    assert pairs, "qwen3 profile must include a migration grid"
+    for (s, a, b) in pairs:
+        costs = [perf.migrate_cost(s, a, b, ctx)
+                 for ctx in (128, 1024, 8192, 65536)]
+        assert all(c > 0 for c in costs)
+        assert costs == sorted(costs)
+        assert costs[-1] > costs[0]
+
+
+def test_migrate_cost_matches_ground_truth_on_grid(world):
+    soc, gt, perf = world
+    stage = gt.stages["chat_decode"]
+    for ctx in LinearPerfModel.MIGRATE_CTX:
+        got = perf.migrate_cost("chat_decode", "gpu", "cpu", ctx)
+        want = gt.migrate_cost(stage, soc.pu("gpu"), soc.pu("cpu"), ctx)
+        assert got == pytest.approx(want, rel=1e-9)
+    # same PU is free; unknown pairs fall back to None (legacy constant)
+    assert perf.migrate_cost("chat_decode", "gpu", "gpu", 4096) == 0.0
+    assert perf.migrate_cost("chat_decode", "gpu", "nope", 4096) is None
+
+
+def test_migrate_cost_scales_with_kv_bytes(world):
+    """chat (qwen3-4B) carries a heavier per-token cache than the search
+    model (qwen3-1.7B), so the same context costs more to move."""
+    _soc, _gt, perf = world
+    assert perf.kv_bytes["chat_decode"] > perf.kv_bytes["rewrite_decode"]
+    c = perf.migrate_cost("chat_decode", "gpu", "cpu", 4096)
+    r = perf.migrate_cost("rewrite_decode", "gpu", "cpu", 4096)
+    assert c > r
+
+
+def test_migrate_profile_save_load_roundtrip(tmp_path, perf):
+    path = str(tmp_path / "profile.json")
+    perf.save(path)
+    loaded = LinearPerfModel.load(path)
+    assert loaded.migrate_coef == {
+        k: tuple(v) for k, v in perf.migrate_coef.items()}
+    assert loaded.kv_bytes == perf.kv_bytes
+    # pre-residency blobs (no migration grid) still load and degrade
+    with open(path) as f:
+        blob = json.load(f)
+    blob.pop("migrate_coef")
+    blob.pop("kv_bytes")
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    old = LinearPerfModel.load(path)
+    assert old.migrate_cost("chat_decode", "gpu", "cpu", 4096) is None
+
+
+# --- footprint accounting -----------------------------------------------------
+
+def test_footprint_join_boundary_leave():
+    kv = KVResidency(synthetic_perf(kv_bytes=10.0))
+    a = decode_node("q0/d", ctx=100, workload=64)
+    b = decode_node("q1/d", ctx=50, workload=32)
+    round_ = Node("dround:x", "chat_decode", "stream_decode", 64,
+                  payload={"members": [a, b], "decode_round": True,
+                           "decode_width": 2})
+    assert kv.migrate_for_dispatch(round_, "gpu") == []   # first join: free
+    assert kv.resident_bytes("gpu") == (100 + 50) * 10.0
+    kv.on_boundary(a, "gpu", 16)
+    kv.on_boundary(b, "gpu", 16)
+    assert kv.resident_bytes("gpu") == (116 + 66) * 10.0
+    kv.on_boundary(b, "gpu", 16, left=True)               # leave frees
+    assert kv.resident_bytes("gpu") == 116 * 10.0
+    assert kv.resident_bytes() == 116 * 10.0
+
+
+def test_refuse_migration_counts_bytes_and_payload():
+    kv = KVResidency(synthetic_perf(kv_bytes=10.0))
+    a = decode_node("q0/d", ctx=100, workload=64)
+    b = decode_node("q1/d", ctx=50, workload=64)
+    r1 = Node("dround:1", "chat_decode", "stream_decode", 64,
+              payload={"members": [a, b], "decode_round": True})
+    kv.migrate_for_dispatch(r1, "gpu")
+    kv.on_boundary(a, "gpu", 16)
+    kv.on_boundary(b, "gpu", 16)
+    # re-fuse on another PU: both caches move at their boundary-grown size
+    r2 = Node("dround:2", "chat_decode", "stream_decode", 48,
+              payload={"members": [a, b], "decode_round": True})
+    moved = kv.migrate_for_dispatch(r2, "cpu")
+    assert [(m.id, src) for m, src, _c, _b in moved] == [
+        ("q0/d", "gpu"), ("q1/d", "gpu")]
+    assert kv.migrations == 2
+    assert kv.bytes_moved == (116 + 66) * 10.0
+    assert a.payload["kv_migrations"] == 1
+    assert a.payload["kv_bytes_moved"] == 116 * 10.0
+    # re-dispatch on the same PU is free (idempotent)
+    assert kv.migrate_for_dispatch(r2, "cpu") == []
+    assert kv.migrations == 2
+
+
+def test_solo_stream_tracks_across_chain_pieces():
+    """Sub-stage chaining mints fresh node ids; the stream key (group)
+    keeps residency continuous, and each piece charges its token group
+    into the context exactly once."""
+    kv = KVResidency(synthetic_perf(kv_bytes=1.0))
+    head = decode_node("q0/d", ctx=100, workload=16)
+    head.group = "q0/d"
+    kv.migrate_for_dispatch(head, "gpu")
+    assert kv.tracked(head).ctx_tokens == 116      # kv_ctx + served group
+    kv.migrate_for_dispatch(head, "gpu")           # straggler re-dispatch
+    assert kv.tracked(head).ctx_tokens == 116      # idempotent per piece
+    rest = decode_node("q0/d.r#1", ctx=100, workload=16)
+    rest.group = "q0/d"
+    assert stream_key(rest) == stream_key(head)
+    moved = kv.migrate_for_dispatch(rest, "cpu")   # chain hops PU: priced
+    assert len(moved) == 1 and moved[0][1] == "gpu"
+    assert kv.tracked(rest).ctx_tokens == 132
+    assert kv.bytes_moved == 116.0                 # footprint before growth
+
+
+def test_migrate_penalty_prices_only_movers():
+    kv = KVResidency(synthetic_perf(kv_bytes=10.0, sec_per_tok=1e-3))
+    a = decode_node("q0/d", ctx=100, workload=64, batch_pu="gpu")
+    b = decode_node("q1/d", ctx=50, workload=64, batch_pu="cpu")
+    r = Node("dround:1", "chat_decode", "stream_decode", 64,
+             payload={"members": [a, b], "decode_round": True})
+    moving, cost = kv.migrate_penalty(r, "gpu")
+    assert moving == 1 and cost == pytest.approx(50 * 1e-3)   # b moves
+    moving, cost = kv.migrate_penalty(r, "npu")
+    assert moving == 2 and cost == pytest.approx(150 * 1e-3)  # both move
+    # unknown pair: None — the scheduler falls back to the constant
+    kv2 = KVResidency(synthetic_perf(pus=("cpu", "gpu")))
+    assert kv2.migrate_penalty(r, "npu") is None
+
+
+# --- prefer-PU resolution under conflicting history --------------------------
+
+def test_fuse_decode_prefers_largest_footprint_on_conflict():
+    dag = DynamicDAG()
+    kv = KVResidency(synthetic_perf(kv_bytes=1.0))
+    dag.kv = kv
+    small = dag.add(decode_node("q0/d", ctx=10, workload=64,
+                                batch_pu="gpu"))
+    big = dag.add(decode_node("q1/d", ctx=1000, workload=64,
+                              batch_pu="cpu"))
+    fused = dag.fuse_decode([small, big])
+    assert fused.payload["prefer_pu"] == "cpu"     # big cache anchors
+    # agreement still short-circuits (legacy path)
+    dag2 = DynamicDAG()
+    a = dag2.add(decode_node("q0/e", ctx=10, workload=64, batch_pu="npu"))
+    b = dag2.add(decode_node("q1/e", ctx=10, workload=64, batch_pu="npu"))
+    assert dag2.fuse_decode([a, b]).payload["prefer_pu"] == "npu"
+
+
+def test_fuse_decode_conflict_without_tracker_stays_legacy():
+    dag = DynamicDAG()          # no dag.kv: legacy — no preference at all
+    a = dag.add(decode_node("q0/d", ctx=10, workload=64, batch_pu="gpu"))
+    b = dag.add(decode_node("q1/d", ctx=10, workload=64, batch_pu="cpu"))
+    assert "prefer_pu" not in dag.fuse_decode([a, b]).payload
+
+
+def test_prefer_pu_deterministic_tie_break():
+    kv = KVResidency(synthetic_perf(kv_bytes=1.0))
+    a = decode_node("q0/d", ctx=100, workload=64, batch_pu="gpu")
+    b = decode_node("q1/d", ctx=100, workload=64, batch_pu="cpu")
+    # equal footprints: smallest PU name wins, independent of member order
+    assert kv.prefer_pu([a, b]) == kv.prefer_pu([b, a]) == "cpu"
+    assert kv.prefer_pu([decode_node("q2/d", workload=8)]) is None
+
+
+# --- scheduler integration ----------------------------------------------------
+
+def test_scheduler_kv_gate_and_validation(perf):
+    sched = HeroScheduler(perf, ["cpu", "gpu", "npu"], 1e9,
+                          SchedulerConfig())
+    assert sched.kv is None                       # off by default
+    on = HeroScheduler(perf, ["cpu", "gpu", "npu"], 1e9,
+                       SchedulerConfig(kv_residency=True))
+    assert isinstance(on.kv, KVResidency)
+    assert on.policy.kv is on.kv
+    with pytest.raises(KeyError):
+        HeroScheduler(perf, ["cpu"], 1e9,
+                      SchedulerConfig(migrate_pricing="nope"))
+
+
+# --- end-to-end: goldens off, parity on ---------------------------------------
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("hotpotqa", 8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def means(traces):
+    return default_means(traces)
+
+
+def test_goldens_bit_identical_with_kv_off(traces, means):
+    """kv_residency=False (the default) keeps the PR 3 continuous-decode
+    behavior bit-exact: no tracking, no physics, the legacy constant."""
+    with open(os.path.join(GOLDEN_DIR, "pr3_decode_batch.json")) as f:
+        golden = json.load(f)
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, batch_policy="fixed",
+                       kv_residency=False)
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+    got = [r.makespan for r in sess.run()]
+    assert got == pytest.approx(golden["saturated8_w1_decode_makespans"],
+                                rel=1e-12)
+    assert sess.last_run.kv_migrations == 0
+    assert sess.last_run.kv_bytes_moved == 0.0
+
+
+def _kv_session(traces, means, backend="sim", **kw):
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       coalesce=True, batch_policy="adaptive",
+                       kv_residency=True, backend=backend, **kw)
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=(1, 3)[qi % 2], arrival_time=qi * 0.05)
+    return sess
+
+
+@pytest.mark.slow
+def test_sim_live_parity_of_kv_accounting(means):
+    """Both substrates register migrations through the same tracker hook:
+    run totals equal the kv_migrate events in the timeline AND the
+    per-query sums, with bytes moved iff something migrated."""
+    import time as _time
+    traces6 = sample_traces("hotpotqa", 6, seed=11)
+    for backend in ("sim", "live"):
+        kw = {}
+        if backend == "live":
+            kw["stage_fns"] = {"chat_decode":
+                               lambda n, b: _time.sleep(0.01)}
+        sess = _kv_session(traces6, means, backend=backend, **kw)
+        res = sess.run(timeout=180)
+        run = sess.last_run
+        events = sum(1 for e in run.events if e[1] == "kv_migrate")
+        assert run.kv_migrations == events
+        assert sum(r.kv_migrations for r in res) == run.kv_migrations
+        assert (run.kv_bytes_moved > 0) == (run.kv_migrations > 0)
+        assert sum(r.kv_bytes_moved for r in res) == pytest.approx(
+            run.kv_bytes_moved)
+
+
+def test_sim_kv_on_runs_and_accounts(traces, means):
+    """The sim backend with residency on: consistent counters and the
+    same per-query stage coverage as the goldens path."""
+    sess = _kv_session(traces, means)
+    res = sess.run(timeout=7200)
+    run = sess.last_run
+    assert all(r.makespan > 0 for r in res)
+    assert run.kv_migrations == sum(
+        1 for e in run.events if e[1] == "kv_migrate")
+    assert sum(r.kv_migrations for r in res) == run.kv_migrations
+    assert sum(r.kv_bytes_moved for r in res) == pytest.approx(
+        run.kv_bytes_moved)
+
+
+# --- hypothesis: bytes charged == Σ footprints at migration -------------------
+
+def test_total_bytes_charged_equals_boundary_deltas():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    KVB = 8.0
+    PUS = ("cpu", "gpu", "npu")
+
+    @hyp.given(st.lists(st.tuples(st.integers(0, 2),    # stream index
+                                  st.integers(0, 2),    # pu index
+                                  st.integers(0, 3)),   # op selector
+                        min_size=1, max_size=60),
+               st.lists(st.integers(0, 500), min_size=3, max_size=3))
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(ops, ctxs):
+        kv = KVResidency(synthetic_perf(kv_bytes=KVB))
+        nodes = [decode_node(f"q{i}/d", ctx=ctxs[i], workload=1 << 20)
+                 for i in range(3)]
+        expect_bytes, expect_migs = 0.0, 0
+        shadow = {}     # stream -> (pu, ctx): independent reconstruction
+        for si, pi, op in ops:
+            m, pu = nodes[si], PUS[pi]
+            cur = shadow.get(si)
+            if op == 3 and cur is not None:
+                kv.on_boundary(m, cur[0], 0, left=True)
+                del shadow[si]
+                continue
+            if op in (0, 1):      # a round dispatch serving m on pu
+                r = Node(f"r{si}", m.stage, "stream_decode", 16,
+                         payload={"members": [m], "decode_round": True})
+                if cur is None:
+                    shadow[si] = (pu, ctxs[si])
+                elif cur[0] != pu:
+                    expect_bytes += cur[1] * KVB
+                    expect_migs += 1
+                    shadow[si] = (pu, cur[1])
+                kv.migrate_for_dispatch(r, pu)
+            else:                 # boundary: +16 tokens on pu
+                if cur is None:
+                    shadow[si] = (pu, ctxs[si] + 16)
+                else:
+                    shadow[si] = (pu, cur[1] + 16)
+                kv.on_boundary(m, pu, 16)
+        assert kv.migrations == expect_migs
+        assert kv.bytes_moved == pytest.approx(expect_bytes)
+
+    prop()
