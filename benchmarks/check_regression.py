@@ -84,6 +84,18 @@ def compare(current: dict, baseline: dict, tol: float):
                     f"{cur_row['kv_migrations']}, bytes_moved: "
                     f"{base_row.get('kv_bytes', 0.0) / 1e9:.2f} GB -> "
                     f"{cur_row.get('kv_bytes', 0.0) / 1e9:.2f} GB")
+            # paged-KV hit rate: hits / (hits + prefill dispatches is not
+            # recorded per cell, so report hits and skipped tokens — the
+            # structural claims below enforce non-zero reuse)
+            if cur_row.get("kv_page_hits") or base_row.get("kv_page_hits"):
+                report.append(
+                    f"{regime}/{variant} kv_page_hits: "
+                    f"{base_row.get('kv_page_hits', 0)} -> "
+                    f"{cur_row.get('kv_page_hits', 0)}, hit_tokens: "
+                    f"{base_row.get('kv_hit_tokens', 0)} -> "
+                    f"{cur_row.get('kv_hit_tokens', 0)}, evictions: "
+                    f"{base_row.get('kv_evictions', 0)} -> "
+                    f"{cur_row.get('kv_evictions', 0)}")
     # structural serving claims, checked on whatever regimes this leg ran:
     # continuous decode batching keeps its p99 win over stage coalescing
     # under saturating arrivals, and the adaptive policy keeps its win
@@ -109,6 +121,20 @@ def compare(current: dict, baseline: dict, tol: float):
         regressions.append(
             f"migration: hero+kv p99 {kvm['p99']:.2f}s no longer beats "
             f"constant-priced hero+kv-const p99 {kvc['p99']:.2f}s")
+    # the paged subsystem earns its keep on the shared-corpus prefix
+    # regime: the prefix cache must actually hit, and those hits must buy
+    # a p99 win over the monolithic (pages-off) tracker
+    pre = cur_regimes.get("prefix", {})
+    pages, off = pre.get("hero+pages"), pre.get("hero+kv")
+    if pages and off:
+        if not pages.get("kv_page_hits"):
+            regressions.append(
+                "prefix: hero+pages scored zero prefix-cache page hits "
+                "on the shared-corpus regime")
+        if pages["p99"] >= off["p99"]:
+            regressions.append(
+                f"prefix: hero+pages p99 {pages['p99']:.2f}s no longer "
+                f"beats pages-off hero+kv p99 {off['p99']:.2f}s")
     return report, regressions, missing
 
 

@@ -13,10 +13,12 @@ them.  Three admission regimes are compared:
                  arrival-gated timer nodes).
 
 ``serving_metrics`` is the serving benchmark behind CI's ``bench-smoke``
-matrix: three regimes (saturated / staggered W1, plus a ``mixed`` regime
-interleaving W1–W3 with an optional inter-arrival sweep) × the scheduler
-variants, reporting throughput, p50/p99 latency, and the batching
-policy's chosen decode widths / token groups per cell.  Each CI matrix
+matrix: five regimes (saturated / staggered W1, a ``mixed`` regime
+interleaving W1–W3 with an optional inter-arrival sweep, the
+KV-``migration`` stress case, and a shared-corpus ``prefix`` regime for
+the paged-KV prefix cache) × the scheduler variants, reporting
+throughput, p50/p99 latency, and the batching policy's chosen decode
+widths / token groups per cell.  Each CI matrix
 leg runs ONE regime (``--regime``) and writes its own
 ``BENCH_serving.json`` artifact, which ``check_regression.py`` diffs
 against the per-regime baseline under ``benchmarks/baselines/``.
@@ -109,6 +111,20 @@ KV_VARIANTS = (
                                           "migrate_pricing": "constant"})),
     ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
                      kv_residency=True)),
+    ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
+                        kv_pages=True)),
+)
+
+# the prefix regime's variant set: fixed caps, the monolithic KV tracker
+# (pages off — the comparator the structural claim is judged against),
+# and the paged subsystem whose cross-query prefix cache is the lever
+# this regime exercises
+PREFIX_VARIANTS = (
+    ("hero+decode_batch", dict(coalesce=True)),
+    ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
+                     kv_residency=True)),
+    ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
+                        kv_pages=True)),
 )
 
 
@@ -136,6 +152,11 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
             # bytes they shipped (zero with the subsystem off)
             "kv_migrations": int(sess.last_run.kv_migrations),
             "kv_bytes": float(sess.last_run.kv_bytes_moved),
+            # paged-KV telemetry: prefix-cache hits, the prefill tokens
+            # they skipped, and tier evictions (zero with pages off)
+            "kv_page_hits": int(sess.last_run.kv_page_hits),
+            "kv_hit_tokens": int(sess.last_run.kv_hit_tokens),
+            "kv_evictions": int(sess.last_run.kv_evictions),
             # chosen shapes per regime: the observable output of the
             # batching policy (widths/groups the scheduler actually ran)
             "decode_widths": dict(batching.get("decode_width", {})),
@@ -158,6 +179,12 @@ SERVING_REGIMES = {
     "mixed": dict(k=9, wfs=(1, 2, 3), inter_arrival=0.5),
     "migration": dict(k=8, wfs=(3,), inter_arrival=1.0,
                       ctx_scale=4, answer_scale=6, variants=KV_VARIANTS),
+    # prefix-reuse regime: k W1 queries over ONE shared 4-document corpus
+    # (identical retrieved chunk lists), so every chat prefill after the
+    # first can hit resident context pages — the cross-query prefix-cache
+    # case the paged-KV subsystem exists for
+    "prefix": dict(k=8, wfs=(1,), inter_arrival=0.5,
+                   shared_corpus=True, variants=PREFIX_VARIANTS),
 }
 
 # the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
@@ -185,7 +212,11 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 todo.append((f"mixed@{ia:g}", {**cfg, "inter_arrival": ia}))
     out = {}
     for regime, cfg in todo:
-        traces = sample_traces(dataset, cfg["k"], seed=11)
+        if cfg.get("shared_corpus"):
+            from repro.rag import shared_corpus_traces
+            traces = shared_corpus_traces(dataset, cfg["k"], seed=11)
+        else:
+            traces = sample_traces(dataset, cfg["k"], seed=11)
         if cfg.get("ctx_scale") or cfg.get("answer_scale"):
             # the migration-heavy regime stretches the sampled traces:
             # long contexts grow the resident KV footprints, long answers
@@ -203,14 +234,16 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
             f"wf={'+'.join(f'w{w}' for w in wfs)}, "
             f"inter_arrival={cfg['inter_arrival']}s)")
         csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
-            "decode_rounds,kv_migrations,kv_gb,widths,groups")
+            "decode_rounds,kv_migrations,kv_gb,page_hits,hit_tok,"
+            "widths,groups")
         for label, kw in cfg.get("variants", variants):
             row = cells[label] = _variant_metrics(
                 world, means, traces, wfs, cfg["inter_arrival"], kw)
             csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
                 f"{row['decode_rounds']},{row['kv_migrations']},"
-                f"{row['kv_bytes'] / 1e9:.2f},{_hist(row['decode_widths'])},"
+                f"{row['kv_bytes'] / 1e9:.2f},{row['kv_page_hits']},"
+                f"{row['kv_hit_tokens']},{_hist(row['decode_widths'])},"
                 f"{_hist(row['decode_groups'])}")
         kvm, kvc = cells.get("hero+kv"), cells.get("hero+kv-const")
         if kvm and kvc:
@@ -220,6 +253,12 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 f"{kvc['kv_bytes'] / 1e9:.2f} GB -> "
                 f"{kvm['kv_migrations']} moves/"
                 f"{kvm['kv_bytes'] / 1e9:.2f} GB)")
+        pages, off = cells.get("hero+pages"), cells.get("hero+kv")
+        if pages and off:
+            csv(f"# {world}/{regime}: paged KV p99 {off['p99']:.2f}s -> "
+                f"{pages['p99']:.2f}s ({pages['kv_page_hits']} page hits/"
+                f"{pages['kv_hit_tokens']} prefill tokens skipped, "
+                f"{pages['kv_evictions']} evictions)")
         if "hero+adaptive" not in cells or "hero" not in cells:
             continue
         gain = (cells["hero+adaptive"]["throughput"]
@@ -273,19 +312,21 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
     for regime, row in cells.items():
         fixed = row["hero+decode_batch"]["p99"]
         for label in ("hero", "hero+decode_batch", "hero+adaptive",
-                      "hero+adaptive-q", "hero+kv-const", "hero+kv"):
+                      "hero+adaptive-q", "hero+kv-const", "hero+kv",
+                      "hero+pages"):
             if label not in row:   # per-regime variant sets differ
                 continue
             p99 = row[label]["p99"]
             delta = (p99 / fixed - 1.0) * 100.0
             csv(f"{regime},{label},{p99:.2f},{row[label]['p50']:.2f},"
                 f"{row[label]['total']:.2f},{delta:+.1f}%")
-        adaptive = row["hero+adaptive"]["p99"]
-        if adaptive > fixed * (1.0 + tol):
-            violations.append(
-                f"{regime}: adaptive p99 {adaptive:.2f}s regresses "
-                f"{(adaptive / fixed - 1) * 100:.1f}% vs fixed-cap "
-                f"{fixed:.2f}s (> {tol * 100:.0f}% tolerance)")
+        if "hero+adaptive" in row:   # the prefix regime swaps this cell out
+            adaptive = row["hero+adaptive"]["p99"]
+            if adaptive > fixed * (1.0 + tol):
+                violations.append(
+                    f"{regime}: adaptive p99 {adaptive:.2f}s regresses "
+                    f"{(adaptive / fixed - 1) * 100:.1f}% vs fixed-cap "
+                    f"{fixed:.2f}s (> {tol * 100:.0f}% tolerance)")
     mixed = cells.get("mixed")
     if mixed and mixed["hero+adaptive"]["p99"] >= mixed["hero+decode_batch"]["p99"]:
         violations.append(
@@ -300,6 +341,18 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
             "migration: modeled migration pricing p99 no longer beats "
             f"the constant ({kvm['p99']:.2f}s vs {kvc['p99']:.2f}s) — "
             "the regime KV-residency tracking exists for")
+    pre = cells.get("prefix", {})
+    pages, off = pre.get("hero+pages"), pre.get("hero+kv")
+    if pages and off:
+        if not pages["kv_page_hits"]:
+            violations.append(
+                "prefix: paged KV scored zero prefix-cache hits on the "
+                "shared-corpus regime — the case the page table exists for")
+        if pages["p99"] >= off["p99"]:
+            violations.append(
+                "prefix: paged KV p99 no longer beats the monolithic "
+                f"tracker ({pages['p99']:.2f}s vs {off['p99']:.2f}s) on "
+                "the shared-corpus regime")
     for v in violations:
         csv(f"# ABLATION GATE: {v}")
     if not violations:

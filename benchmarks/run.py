@@ -65,6 +65,8 @@ def main() -> None:
          {}),
         ("Serving_continuous_batching (bench-smoke gate)",
          multiquery.serving_metrics, {}),
+        ("Serving_prefix_cache (paged-KV bench-smoke leg)",
+         multiquery.serving_metrics, {"regimes": ("prefix",)}),
         ("Serving-ablation_adaptive_vs_fixed_caps (CI gate)",
          multiquery.serving_ablation, {}),
         ("Kernel_microbench", kernels_bench.run, {}),

@@ -52,6 +52,12 @@ class BackendRun:
     # is off): decode-round cache moves and the bytes they shipped
     kv_migrations: int = 0
     kv_bytes_moved: float = 0.0
+    # paged-KV totals (zero unless ``kv_pages`` is on): prefix-cache hits,
+    # the prefill tokens they skipped, and tier-eviction traffic
+    kv_page_hits: int = 0
+    kv_hit_tokens: int = 0
+    kv_evictions: int = 0
+    kv_evicted_bytes: float = 0.0
 
 
 class Backend(Protocol):
@@ -103,7 +109,14 @@ class SimBackend:
                           kv_migrations=(scheduler.kv.migrations
                                          if scheduler.kv else 0),
                           kv_bytes_moved=(scheduler.kv.bytes_moved
-                                          if scheduler.kv else 0.0))
+                                          if scheduler.kv else 0.0),
+                          kv_page_hits=getattr(scheduler.kv, "hits", 0),
+                          kv_hit_tokens=getattr(scheduler.kv,
+                                                "hit_tokens", 0),
+                          kv_evictions=getattr(scheduler.kv,
+                                               "evictions", 0),
+                          kv_evicted_bytes=getattr(scheduler.kv,
+                                                   "evicted_bytes", 0.0))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -182,4 +195,8 @@ class LiveBackend:
                       scheduler.policy_log.items()},
             kv_migrations=scheduler.kv.migrations if scheduler.kv else 0,
             kv_bytes_moved=(scheduler.kv.bytes_moved
-                            if scheduler.kv else 0.0))
+                            if scheduler.kv else 0.0),
+            kv_page_hits=getattr(scheduler.kv, "hits", 0),
+            kv_hit_tokens=getattr(scheduler.kv, "hit_tokens", 0),
+            kv_evictions=getattr(scheduler.kv, "evictions", 0),
+            kv_evicted_bytes=getattr(scheduler.kv, "evicted_bytes", 0.0))

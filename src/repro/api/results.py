@@ -36,6 +36,10 @@ class QueryResult:
     # rounds moving PU under kv_residency tracking) and the bytes shipped
     kv_migrations: int = 0
     kv_bytes_moved: float = 0.0
+    # paged-KV prefix-cache hits on this query's prefills and the prefill
+    # tokens those hits skipped (zero unless ``kv_pages`` is on)
+    kv_page_hits: int = 0
+    kv_hit_tokens: int = 0
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -55,13 +59,15 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         stage_latency: Dict[str, float] = {}
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
-        coalesced = rounds = kv_migs = 0
+        coalesced = rounds = kv_migs = page_hits = hit_tokens = 0
         kv_bytes = 0.0
         for n in nodes:
             if n.status != "done" or n.start < 0:
                 continue
             kv_migs += n.payload.get("kv_migrations", 0)
             kv_bytes += n.payload.get("kv_bytes_moved", 0.0)
+            page_hits += n.payload.get("kv_page_hits", 0)
+            hit_tokens += n.payload.get("kv_hit_tokens", 0)
             dur = n.finish - n.start
             # stage latency is wall time in the stage; PU busy is charged
             # by workload share when the node rode a fused (coalesced)
@@ -104,7 +110,8 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             pu_busy=pu_busy, dispatches=dispatches,
             redispatches=redispatches, n_nodes=len(nodes),
             coalesced_nodes=coalesced, decode_rounds=rounds,
-            kv_migrations=kv_migs, kv_bytes_moved=kv_bytes)
+            kv_migrations=kv_migs, kv_bytes_moved=kv_bytes,
+            kv_page_hits=page_hits, kv_hit_tokens=hit_tokens)
         h.result = res
         out.append(res)
     return out

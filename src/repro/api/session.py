@@ -36,6 +36,12 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
   footprint ÷ profiled link bandwidth, ``core/kv_residency.py``) instead
   of the ``decode_migrate_cost`` constant; results then report
   ``kv_migrations`` / ``kv_bytes_moved`` per query.
+- ``kv_pages=True`` upgrades residency tracking to the paged-KV
+  subsystem (``core/kv_pages.py``): fixed-size pages in a tiered
+  PU-local → DRAM → disk store with LRU-with-pin eviction, page-granular
+  migration, and a content-hash prefix cache that lets prefills whose
+  retrieved-context prefix is already resident skip that work; results
+  then also report ``kv_page_hits`` / ``kv_hit_tokens``.
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
@@ -100,6 +106,7 @@ class HeroSession:
                  coalesce: Optional[bool] = None,
                  batch_policy: Optional[str] = None,
                  kv_residency: Optional[bool] = None,
+                 kv_pages: Optional[bool] = None,
                  fine_grained: Optional[bool] = None,
                  means: Optional[dict] = None,
                  pus: Optional[List[str]] = None,
@@ -118,6 +125,9 @@ class HeroSession:
         if kv_residency is not None:   # sugar for KV-residency tracking
             cfg_overrides = {**(cfg_overrides or {}),
                              "kv_residency": kv_residency}
+        if kv_pages is not None:       # sugar for the paged-KV subsystem
+            cfg_overrides = {**(cfg_overrides or {}),
+                             "kv_pages": kv_pages}
         self.cfg_overrides = cfg_overrides
         self.fine_grained = fine_grained
         self.means = means

@@ -66,6 +66,10 @@ class View:
             val = getattr(source, k)
             if isinstance(val, (int, float, str)):
                 vals[_TRACE_ALIASES.get(k, k)] = val
+            elif isinstance(val, tuple):
+                # structured trace fields (e.g. retrieved chunk_ids — the
+                # prefix-cache content keys) pass through verbatim
+                vals[_TRACE_ALIASES.get(k, k)] = val
         return cls(vals)
 
 
@@ -85,6 +89,12 @@ class StageSpec:
     # opt this stage out of cross-query batch coalescing (e.g. stages with
     # per-query side effects that must not share a dispatch)
     coalescable: bool = True
+    # stream_prefill only: tokens at the HEAD of this prefill that encode
+    # raw retrieved context (prompt order: [shared context][query...]) —
+    # prefix-cacheable across queries retrieving the same chunk ids.
+    # Stamped as payload["prefix_segments"] when the trace carries
+    # chunk_ids; the paged-KV prefix cache keys page hashes off it
+    shared_ctx: Optional[Workload] = None
 
     @property
     def tid(self) -> str:
@@ -209,7 +219,7 @@ class WorkflowSpec:
             return max(int(fn(v)), 1)
 
         def add(d, nid, stage, kind, workload, deps, template,
-                coalescable=True):
+                coalescable=True, shared_ctx=0):
             n = d.add(Node(id=nid, stage=stage, kind=kind,
                            workload=max(int(workload), 1),
                            deps=set(deps), template=template))
@@ -223,6 +233,28 @@ class WorkflowSpec:
                 n.payload["kv_ctx"] = sum(
                     d.nodes[dep].workload for dep in n.deps
                     if d.nodes[dep].kind == "stream_prefill")
+                for dep in n.deps:
+                    if d.nodes[dep].kind == "stream_prefill":
+                        # link prefill pieces to the decode stream whose
+                        # cache they fill (paged-KV page adoption)
+                        d.nodes[dep].payload["kv_stream"] = n.id
+            elif kind == "stream_prefill" and shared_ctx > 0:
+                chunks = getattr(v, "chunk_ids", ())
+                if chunks:
+                    # prefix-cache content identity, in prompt order: the
+                    # shared retrieved-context head (keyed by the BARE
+                    # stage id + chunk ids, so every admitted query
+                    # retrieving the same chunks maps to the same pages)
+                    # then the per-query remainder (keyed by the full node
+                    # id — never shared)
+                    head = min(int(shared_ctx), n.workload)
+                    bare = (nid[len(prefix):]
+                            if prefix and nid.startswith(prefix) else nid)
+                    segs = [(f"ctx:{bare}:{','.join(map(str, chunks))}",
+                             head)]
+                    if n.workload > head:
+                        segs.append((f"q:{nid}", n.workload - head))
+                    n.payload["prefix_segments"] = tuple(segs)
             return n
 
         gate = [gate_dep] if gate_dep is not None else []
@@ -251,9 +283,11 @@ class WorkflowSpec:
                 d.retarget_dep(N(col.chat_decode), prev, nid)
 
         def add_branch_refine(d: DynamicDAG, key: str, dep: str):
+            # a refine prefill reads a raw retrieved-context piece: fully
+            # prefix-shareable across queries on the same chunk ids
             rp = add(d, N(f"{col.refine_prefill}_{key}"), col.refine_prefill,
                      "stream_prefill", ctx_piece, deps=[dep],
-                     template=col.refine_prefill)
+                     template=col.refine_prefill, shared_ctx=ctx_piece)
             rd = add(d, N(f"{col.refine_decode}_{key}"), col.refine_decode,
                      "stream_decode", refine_piece, deps=[rp.id],
                      template=col.refine_decode)
@@ -269,13 +303,16 @@ class WorkflowSpec:
         for s in self.statics:
             deps = [N(d) for d in s.deps] if s.deps else list(gate)
             add(dag, N(s.id), s.stage, s.kind, W(s.workload), deps=deps,
-                template=s.tid, coalescable=s.coalescable)
+                template=s.tid, coalescable=s.coalescable,
+                shared_ctx=(int(s.shared_ctx(v))
+                            if s.shared_ctx is not None else 0))
             if col is not None and s.id == col.base_dep:
                 # base-branch refine; its chat piece is the chain head (it
                 # carries the query tokens), not an add_chat_piece link
                 rp = add(dag, N(f"{col.refine_prefill}_base"),
                          col.refine_prefill, "stream_prefill", ctx_piece,
-                         deps=[N(s.id)], template=col.refine_prefill)
+                         deps=[N(s.id)], template=col.refine_prefill,
+                         shared_ctx=ctx_piece)
                 rd = add(dag, N(f"{col.refine_decode}_base"),
                          col.refine_decode, "stream_decode", refine_piece,
                          deps=[rp.id], template=col.refine_decode)
@@ -438,7 +475,8 @@ def w1_spec() -> WorkflowSpec:
     statics = _retrieval_statics(base=False) + [
         StageSpec("chat_prefill", "chat_prefill", "stream_prefill",
                   lambda v: v.context_tokens + v.query_tokens,
-                  deps=("rerank",), role="chat"),
+                  deps=("rerank",), role="chat",
+                  shared_ctx=lambda v: v.context_tokens),
         StageSpec("chat_decode", "chat_decode", "stream_decode",
                   lambda v: v.answer_tokens, deps=("chat_prefill",),
                   role="chat"),

@@ -6,6 +6,8 @@ from repro.core.perf_model import (  # noqa: F401
     snapdragon_8gen3, snapdragon_8gen4, tpu_v5e_slices)
 from repro.core.batch_policy import (  # noqa: F401
     AdaptiveBatchPolicy, ArrivalTracker, FixedBatchPolicy, make_policy)
+from repro.core.kv_pages import (  # noqa: F401
+    KVPage, PagedKVCache, PagedStream, page_keys)
 from repro.core.kv_residency import KVResidency, StreamKV  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
     HeroScheduler, SchedulerConfig, strategy_config)

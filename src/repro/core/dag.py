@@ -140,6 +140,13 @@ class DynamicDAG:
                 m.payload["coalesced"] = n.id
                 m.payload["fused_share"] = m.workload / total
                 self.mark_done(m.id, t)
+        if (getattr(self.kv, "paged", False)
+                and n.kind == "stream_prefill"):
+            # paged KV: a finished prefill materializes its prefix pages on
+            # the PU that ran it (reusing resident hashed pages — the
+            # cross-query hit) and links them to its decode stream
+            self.kv.on_prefill_done(
+                n, n.config[0] if n.config is not None else None)
         # dynamic dependencies: expansion happens *before* dependents are
         # released, so newly-created upstream work is observed atomically
         if n.expander is not None:
@@ -224,11 +231,17 @@ class DynamicDAG:
             m.payload["last_slice"] = s
             m.payload["decode_rounds"] = m.payload.get("decode_rounds", 0) + 1
             m.payload["decode_served"] = m.payload.get("decode_served", 0) + s
-            if self.kv is not None and n.config is not None:
-                # residency boundary event: the member's cache grew by the
-                # served slice on the round's PU; leavers free theirs
-                self.kv.on_boundary(m, n.config[0], s,
-                                    left=(s >= m.workload))
+            if self.kv is not None:
+                if n.config is not None:
+                    # residency boundary event: the member's cache grew by
+                    # the served slice on the round's PU; leavers free theirs
+                    self.kv.on_boundary(m, n.config[0], s,
+                                        left=(s >= m.workload))
+                elif s >= m.workload:
+                    # a leaver of an un-configured round (e.g. drained
+                    # without a dispatch) must still release its stream, or
+                    # its footprint stays registered until session end
+                    self.kv.release(m)
             if n.config is not None:
                 # PU occupancy charged by live membership: workload share of
                 # this round's residency

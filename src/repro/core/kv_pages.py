@@ -1,0 +1,558 @@
+"""Paged KV cache: page-table residency, tiered eviction, prefix reuse.
+
+PR 5's :class:`~repro.core.kv_residency.KVResidency` made KV placement
+first-class scheduler state, but tracked each decode stream as ONE
+monolithic footprint: migration was all-or-nothing, capacity was
+unbounded, and the dominant serving pattern — many queries re-prefilling
+the *same* retrieved chunks from a shared corpus — paid full prefill
+every time.  This module supersedes the monolith with a page table, the
+way vLLM-style paged attention and PerCache's hierarchical on-device
+cache organize KV state:
+
+- Each decode stream's cache is a list of fixed-size pages
+  (``SchedulerConfig.kv_page_tokens`` tokens; page bytes follow from the
+  profiled GQA cache shape, ``LinearPerfModel.kv_bytes``) held in a
+  tiered store: PU-local arenas (tier 0), a shared-DRAM spill pool
+  (tier 1) and disk (tier 2), with per-tier capacities from the
+  profiled ``kv_tiers``.
+- Eviction is LRU-with-pin: pages referenced by a live stream
+  (``refs > 0``) are never demoted; unpinned prefix-cache pages demote
+  down the tiers in last-use order.  When every page is pinned the
+  arena soft-overflows (streams are never corrupted to satisfy a
+  capacity model).
+- Migration is page-granular and priced through the same
+  ``link_bandwidth`` model as the monolith: a decode dispatch gathers
+  only the pages *not* already on its PU, so partial moves, the
+  prefill→first-decode hop and busy-PU ETA migration terms all become
+  first-class (PU↔PU hops are ``kv_migrations``/``kv_bytes_moved``,
+  spill-tier hops are fetches, priced by the fitted tier lines).
+- On top of the table sits a content-hash prefix cache: prefill nodes
+  whose token-prefix (retrieved-chunk ids + system/query segments,
+  chain-hashed per page boundary) matches resident pages skip that
+  prefix's prefill workload (``apply_prefix_hits``), and the resident
+  pages are re-referenced for the new stream at prefill completion
+  (``on_prefill_done``).
+
+Both backends drain the same event/transfer queues (``kv_page_hit`` /
+``kv_evict`` events; spill transfers priced by the simulator through
+``GroundTruthPerf.tier_transfer_cost``), so accounting is
+backend-independent.  The subsystem is gated by
+``SchedulerConfig.kv_pages`` — off, the scheduler keeps the monolithic
+tracker (or none), bit-identical to the PR 2/3/5 goldens.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.dag import Node
+from repro.core.kv_residency import _kv_members, stream_key
+from repro.core.perf_model import LinearPerfModel
+
+DRAM, DISK = "dram", "disk"
+
+
+def decode_stage_of(stage: str) -> str:
+    """The decode stage whose profiled KV shape denominates pages produced
+    by ``stage`` (``chat_prefill`` fills ``chat_decode``'s cache — the
+    builtin specs all follow the ``*_prefill``/``*_decode`` convention)."""
+    if stage.endswith("_prefill"):
+        return stage[: -len("_prefill")] + "_decode"
+    return stage
+
+
+def chain_hash(prev: Optional[str], content: str) -> str:
+    """Hash of one page given the chain hash of the pages before it — two
+    prefixes share page ``i`` iff they agree on ALL content up to and
+    including page ``i``, which is exactly KV-cache validity."""
+    h = hashlib.sha1()
+    h.update((prev or "").encode())
+    h.update(b"\x00")
+    h.update(content.encode())
+    return h.hexdigest()
+
+
+def page_keys(segments: Sequence[Tuple[str, int]], page_tokens: int
+              ) -> List[Tuple[str, int]]:
+    """Split a token-prefix described by ``segments`` (``(content_key,
+    tokens)`` in prompt order) at page boundaries: ``[(chain_hash,
+    tokens_in_page), ...]``.  A page spanning a segment boundary hashes
+    both keys, so e.g. the page mixing shared context with the per-query
+    question is (correctly) only reusable by the identical query."""
+    pages: List[Tuple[str, int]] = []
+    prev: Optional[str] = None
+    fill: List[str] = []
+    used = 0
+    for key, tok in segments:
+        tok = int(tok)
+        off = 0
+        while off < tok:
+            take = min(page_tokens - used, tok - off)
+            fill.append(f"{key}[{off}:{off + take}]")
+            used += take
+            off += take
+            if used == page_tokens:
+                prev = chain_hash(prev, "|".join(fill))
+                pages.append((prev, page_tokens))
+                fill, used = [], 0
+    if used:
+        prev = chain_hash(prev, "|".join(fill))
+        pages.append((prev, used))
+    return pages
+
+
+@dataclass
+class KVPage:
+    """One fixed-size page of some stream's KV cache."""
+
+    pid: int
+    stage: str                 # decode-stage key (profiled bytes/token)
+    tokens: int
+    tier: str                  # PU name, "dram", or "disk"
+    hash: Optional[str] = None  # content id (prefix-cacheable); None=private
+    refs: int = 0              # live streams holding this page (pin)
+    last_use: int = 0          # LRU clock
+
+
+@dataclass
+class PagedStream:
+    """Page-table record of one decode stream's KV cache."""
+
+    stage: str
+    pu: Optional[str]          # anchor PU (None until first serve)
+    ctx_tokens: int            # context resident so far (prefill + decoded)
+    pages: List[int] = field(default_factory=list)
+    # tokens counted in ctx_tokens but not yet backed by pages: a stream
+    # seen before any serve has nowhere to live yet — they materialize as
+    # private pages on the adopted PU at first dispatch, free of charge
+    # (the monolith's first-serve semantics)
+    pending: int = 0
+    charged: Set[str] = field(default_factory=set)
+
+
+class PagedKVCache:
+    """Page-table KV tracker — a drop-in for :class:`KVResidency` (same
+    scheduler/DAG/backend protocol) plus the paged-only hooks
+    (``apply_prefix_hits`` / ``on_prefill_done`` / drain queues).
+    ``paged`` marks the extended protocol for backends."""
+
+    paged = True
+
+    def __init__(self, perf: LinearPerfModel, page_tokens: int = 64):
+        self.perf = perf
+        self.page_tokens = max(int(page_tokens), 1)
+        self._streams: Dict[str, PagedStream] = {}
+        self._pages: Dict[int, KVPage] = {}
+        self._tier_pages: Dict[str, Set[int]] = {}
+        self._tier_used: Dict[str, float] = {}
+        self._index: Dict[str, int] = {}        # content hash -> pid
+        self._next_pid = 0
+        self._clock = 0
+        # run totals (BackendRun accounting)
+        self.migrations = 0
+        self.bytes_moved = 0.0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.evicted_bytes = 0.0
+        self.fetches = 0
+        self.fetched_bytes = 0.0
+        # drainable queues, consumed by whichever backend dispatches next:
+        # (event_name, node) pairs and (stage, src_tier, dst_tier, tokens)
+        # spill transfers (the simulator charges them ground-truth seconds;
+        # the live runtime records them)
+        self._events: List[Tuple[str, Node]] = []
+        self._transfers: List[Tuple[str, str, str, int]] = []
+
+    # -- page primitives -----------------------------------------------------
+    def _touch(self, pg: KVPage) -> None:
+        self._clock += 1
+        pg.last_use = self._clock
+
+    def _page_bytes(self, pg: KVPage) -> float:
+        return pg.tokens * self.perf.kv_bytes.get(pg.stage, 0.0)
+
+    def _place(self, pg: KVPage, tier: str) -> None:
+        by = self._page_bytes(pg)
+        old = pg.tier
+        self._tier_pages.setdefault(old, set()).discard(pg.pid)
+        self._tier_used[old] = self._tier_used.get(old, 0.0) - by
+        pg.tier = tier
+        self._tier_pages.setdefault(tier, set()).add(pg.pid)
+        self._tier_used[tier] = self._tier_used.get(tier, 0.0) + by
+
+    def _alloc(self, stage: str, tokens: int, tier: str,
+               content: Optional[str], node: Node) -> KVPage:
+        by = tokens * self.perf.kv_bytes.get(stage, 0.0)
+        self._make_room(tier, by, node)
+        pg = KVPage(pid=self._next_pid, stage=stage, tokens=int(tokens),
+                    tier=tier, hash=content)
+        self._next_pid += 1
+        self._pages[pg.pid] = pg
+        self._tier_pages.setdefault(tier, set()).add(pg.pid)
+        self._tier_used[tier] = self._tier_used.get(tier, 0.0) + by
+        if content is not None:
+            self._index[content] = pg.pid
+        self._touch(pg)
+        return pg
+
+    def _free(self, pg: KVPage) -> None:
+        self._tier_pages.setdefault(pg.tier, set()).discard(pg.pid)
+        self._tier_used[pg.tier] = (self._tier_used.get(pg.tier, 0.0)
+                                    - self._page_bytes(pg))
+        if pg.hash is not None and self._index.get(pg.hash) == pg.pid:
+            del self._index[pg.hash]
+        del self._pages[pg.pid]
+
+    def _grow_page(self, pg: KVPage, tokens: int) -> None:
+        by = tokens * self.perf.kv_bytes.get(pg.stage, 0.0)
+        pg.tokens += int(tokens)
+        self._tier_used[pg.tier] = self._tier_used.get(pg.tier, 0.0) + by
+        self._touch(pg)
+
+    def _capacity(self, tier: str) -> float:
+        return self.perf.kv_capacity(tier)
+
+    def _spill_target(self, tier: str) -> Optional[str]:
+        if tier == DISK:
+            return None
+        return DISK if tier == DRAM else DRAM
+
+    def _make_room(self, tier: str, need: float, node: Node) -> None:
+        """Demote LRU unpinned pages out of ``tier`` until ``need`` bytes
+        fit.  Pinned pages (``refs > 0``) are never moved — when only
+        pinned pages remain the arena soft-overflows instead (live
+        streams beat the capacity model)."""
+        cap = self._capacity(tier)
+        if cap == float("inf"):
+            return
+        dst = self._spill_target(tier)
+        while self._tier_used.get(tier, 0.0) + need > cap:
+            victims = [self._pages[pid]
+                       for pid in self._tier_pages.get(tier, ())
+                       if self._pages[pid].refs <= 0]
+            if not victims:
+                return                        # all pinned: soft overflow
+            pg = min(victims, key=lambda p: (p.last_use, p.pid))
+            if dst is None:
+                self._free(pg)                # nowhere lower: drop
+            else:
+                self._make_room(dst, self._page_bytes(pg), node)
+                self._transfers.append((pg.stage, tier, dst, pg.tokens))
+                self._place(pg, dst)
+            self.evictions += 1
+            self.evicted_bytes += self._page_bytes(pg)
+            self._events.append(("kv_evict", node))
+
+    # -- stream bookkeeping --------------------------------------------------
+    def _ensure(self, m: Node) -> PagedStream:
+        key = stream_key(m)
+        st = self._streams.get(key)
+        if st is None:
+            st = self._streams[key] = PagedStream(
+                stage=decode_stage_of(m.stage), pu=None, ctx_tokens=0)
+        # reconcile against the node's own accounting: context the stream
+        # should hold (prefill ctx + decoded so far) beyond what pages /
+        # pending already cover becomes pending growth — this covers
+        # un-stamped prefills and fine-grained chains whose decode kv_ctx
+        # exceeds the sum of linked prefill pieces
+        want = (int(m.payload.get("kv_ctx", 0))
+                + int(m.payload.get("decode_served", 0)))
+        if want > st.ctx_tokens:
+            st.pending += want - st.ctx_tokens
+            st.ctx_tokens = want
+        return st
+
+    def _materialize(self, st: PagedStream, node: Node) -> None:
+        """Back ``st.pending`` tokens with private pages on the anchor PU
+        (free: this is cache the stream produced in place)."""
+        if st.pu is None or st.pending <= 0:
+            return
+        self._grow_tail(st, st.pending, st.pu, node)
+        st.pending = 0
+
+    def _grow_tail(self, st: PagedStream, tokens: int, tier: str,
+                   node: Node) -> None:
+        """Append ``tokens`` to the stream: fill the private tail page,
+        then allocate fresh private pages on ``tier``."""
+        left = int(tokens)
+        if st.pages:
+            tail = self._pages[st.pages[-1]]
+            if (tail.hash is None and tail.tier == tier
+                    and tail.tokens < self.page_tokens):
+                take = min(self.page_tokens - tail.tokens, left)
+                self._make_room(tier, take * self.perf.kv_bytes.get(
+                    tail.stage, 0.0), node)
+                self._grow_page(tail, take)
+                left -= take
+        while left > 0:
+            take = min(self.page_tokens, left)
+            pg = self._alloc(st.stage, take, tier, None, node)
+            pg.refs = 1
+            st.pages.append(pg.pid)
+            left -= take
+
+    # -- KVResidency protocol ------------------------------------------------
+    def footprint_bytes(self, m: Node) -> float:
+        """Resident KV bytes of stream ``m`` (ctx × profiled bytes/token —
+        the same unit the monolith reports)."""
+        st = self._ensure(m)
+        return st.ctx_tokens * self.perf.kv_bytes.get(st.stage, 0.0)
+
+    def resident_bytes(self, tier: Optional[str] = None) -> float:
+        """Total page bytes, optionally restricted to one tier (PU name,
+        "dram" or "disk"); stream-pending (not yet materialized) bytes
+        count toward the no-tier total."""
+        if tier is not None:
+            return max(self._tier_used.get(tier, 0.0), 0.0)
+        total = sum(self._page_bytes(pg) for pg in self._pages.values())
+        total += sum(st.pending * self.perf.kv_bytes.get(st.stage, 0.0)
+                     for st in self._streams.values())
+        return total
+
+    def tracked(self, m: Node) -> Optional[PagedStream]:
+        return self._streams.get(stream_key(m))
+
+    def prefer_pu(self, members: Sequence[Node]) -> Optional[str]:
+        """Same anchor-resolution contract as the monolith: the PU holding
+        the largest resident footprint, deterministic tie-breaks."""
+        totals: Dict[str, float] = {}
+        for m in members:
+            st = self._streams.get(stream_key(m))
+            pu = (st.pu if st is not None and st.pu is not None
+                  else m.payload.get("batch_pu"))
+            if pu is None:
+                continue
+            totals[pu] = totals.get(pu, 0.0) + self.footprint_bytes(m)
+        if not totals:
+            return None
+        return max(sorted(totals), key=lambda p: totals[p])
+
+    def _move_groups(self, st: PagedStream, m: Node, dst_pu: str
+                     ) -> Dict[str, int]:
+        """Tokens of ``st``'s pages NOT resident on ``dst_pu``, grouped by
+        the tier they currently live on (pending tokens count at the
+        anchor PU — they exist, just unmaterialized)."""
+        groups: Dict[str, int] = {}
+        for pid in st.pages:
+            pg = self._pages[pid]
+            if pg.tier != dst_pu:
+                groups[pg.tier] = groups.get(pg.tier, 0) + pg.tokens
+        if st.pending > 0 and st.pu is not None and st.pu != dst_pu:
+            groups[st.pu] = groups.get(st.pu, 0) + st.pending
+        return groups
+
+    def migrate_penalty(self, node: Node, dst_pu: str,
+                        B: float = 0.0) -> Optional[Tuple[int, float]]:
+        """``(n_streams_moving, modeled_seconds)`` for serving ``node`` on
+        ``dst_pu`` — page-granular: only non-resident pages pay, PU hops
+        through the migration lines and spill-tier fetches through the
+        fitted tier lines, φ-scaled.  ``None`` when the profile predates
+        the migration grid (callers keep the legacy constant)."""
+        moving, cost = 0, 0.0
+        for m in _kv_members(node):
+            st = self._streams.get(stream_key(m))
+            if st is None:
+                src = m.payload.get("batch_pu")
+                if src is None or src == dst_pu:
+                    continue
+                ctx = self._ensure(m).ctx_tokens
+                c = self.perf.migrate_cost(m.stage, src, dst_pu, ctx)
+                if c is None:
+                    return None
+                moving += 1
+                cost += c
+                continue
+            groups = self._move_groups(st, m, dst_pu)
+            if not groups:
+                continue
+            any_move = False
+            for tier, toks in sorted(groups.items()):
+                if tier in (DRAM, DISK):
+                    c = self.perf.fetch_cost(st.stage, tier, dst_pu, toks)
+                else:
+                    c = self.perf.migrate_cost(st.stage, tier, dst_pu, toks)
+                if c is None:
+                    return None
+                cost += c
+                any_move = True
+            moving += 1 if any_move else 0
+        if moving:
+            cost *= self.perf.phi(node.stage, B)
+        return moving, cost
+
+    # -- backend hooks -------------------------------------------------------
+    def migrate_for_dispatch(self, node: Node, pu: str
+                             ) -> List[Tuple[Node, str, int, float]]:
+        """Register decode work starting on ``pu`` and gather every member
+        page onto it.  Returns ``(member, src_tier, tokens, bytes)`` per
+        source tier actually moved — PU sources are migrations (counted
+        in ``kv_migrations``/``kv_bytes_moved``, like the monolith),
+        "dram"/"disk" sources are fetches.  Streams never served adopt
+        ``pu`` free (legacy first-serve semantics); solo dispatches grow
+        their stream by the served group, idempotently per piece."""
+        moved: List[Tuple[Node, str, int, float]] = []
+        is_round = bool(node.payload.get("decode_round"))
+        for m in _kv_members(node):
+            st = self._ensure(m)
+            first_serve = st.pu is None
+            if first_serve:
+                st.pu = m.payload.get("batch_pu") or pu
+            self._materialize(st, m)
+            # gather non-resident pages page-granularly
+            gather: Dict[str, Tuple[int, List[int]]] = {}
+            for pid in st.pages:
+                pg = self._pages[pid]
+                if pg.tier != pu:
+                    toks, pids = gather.get(pg.tier, (0, []))
+                    gather[pg.tier] = (toks + pg.tokens, pids + [pid])
+            stream_moved = False
+            for tier in sorted(gather):
+                toks, pids = gather[tier]
+                by = toks * self.perf.kv_bytes.get(st.stage, 0.0)
+                self._make_room(pu, by, m)
+                for pid in pids:
+                    self._place(self._pages[pid], pu)
+                    self._touch(self._pages[pid])
+                moved.append((m, tier, toks, by))
+                if tier in (DRAM, DISK):
+                    self.fetches += 1
+                    self.fetched_bytes += by
+                else:
+                    stream_moved = True
+                    self.bytes_moved += by
+                    m.payload["kv_bytes_moved"] = (
+                        m.payload.get("kv_bytes_moved", 0.0) + by)
+            if stream_moved:
+                self.migrations += 1
+                m.payload["kv_migrations"] = (
+                    m.payload.get("kv_migrations", 0) + 1)
+            st.pu = pu
+            if not is_round and m.id not in st.charged:
+                st.charged.add(m.id)
+                served = max(int(m.workload), 0)
+                st.ctx_tokens += served
+                self._grow_tail(st, served, pu, m)
+        return moved
+
+    def on_boundary(self, m: Node, pu: str, served: int,
+                    left: bool = False) -> None:
+        """One decode-round boundary: the member's cache grew by ``served``
+        tokens on ``pu``; a leaver frees its footprint."""
+        if left:
+            self.release(m)
+            return
+        st = self._ensure(m)
+        st.pu = pu
+        self._materialize(st, m)
+        served = max(int(served), 0)
+        st.ctx_tokens += served
+        self._grow_tail(st, served, pu, m)
+
+    def release(self, m: Node) -> None:
+        """Terminal release of ``m``'s stream: private pages free, hashed
+        (prefix-cache) pages stay resident at ``refs == 0`` — evictable,
+        reusable by the next query with the same prefix."""
+        st = self._streams.pop(stream_key(m), None)
+        if st is None:
+            return
+        for pid in st.pages:
+            pg = self._pages.get(pid)
+            if pg is None:
+                continue
+            pg.refs = max(pg.refs - 1, 0)
+            if pg.refs == 0 and pg.hash is None:
+                self._free(pg)
+
+    # -- prefix cache --------------------------------------------------------
+    def apply_prefix_hits(self, n: Node) -> None:
+        """Scheduler first-seen hook for a ``stream_prefill`` node: trim
+        the node's workload by the longest resident page-aligned prefix
+        (hits keep ≥ 1 token so the node still anchors its successors).
+        Hit pages are referenced immediately (pinned) so they cannot
+        evict before ``on_prefill_done`` adopts them for the stream."""
+        segs = n.payload.get("prefix_segments")
+        if not segs or n.payload.get("kv_prefix_done"):
+            return
+        n.payload["kv_prefix_done"] = True
+        stage = decode_stage_of(n.stage)
+        if stage not in self.perf.kv_bytes:
+            return
+        hits: List[int] = []
+        toks = 0
+        for h, tok in page_keys(segs, self.page_tokens):
+            pid = self._index.get(h)
+            if pid is None:
+                break
+            hits.append(pid)
+            toks += tok
+        if not hits:
+            return
+        trim = min(toks, max(int(n.workload) - 1, 0))
+        if trim <= 0:
+            return
+        n.workload = int(n.workload) - trim
+        for pid in hits:
+            pg = self._pages[pid]
+            pg.refs += 1
+            self._touch(pg)
+        n.payload["kv_page_hits"] = len(hits)
+        n.payload["kv_hit_tokens"] = trim
+        n.payload["kv_hit_pages"] = tuple(hits)
+        self.hits += len(hits)
+        self.hit_tokens += trim
+        self._events.append(("kv_page_hit", n))
+
+    def on_prefill_done(self, n: Node, pu: Optional[str]) -> None:
+        """DAG completion hook for a ``stream_prefill`` node: materialize
+        its prefix pages on ``pu`` (reusing resident hashed pages — the
+        hit — and allocating the misses), then link them to the decode
+        stream stamped as ``payload["kv_stream"]``."""
+        if n.payload.get("kv_paged_done"):
+            return
+        n.payload["kv_paged_done"] = True
+        segs = n.payload.get("prefix_segments")
+        stage = decode_stage_of(n.stage)
+        if not segs or stage not in self.perf.kv_bytes or pu is None:
+            return
+        pages: List[int] = []
+        total = 0
+        for h, tok in page_keys(segs, self.page_tokens):
+            pid = self._index.get(h)
+            if pid is not None:
+                pg = self._pages[pid]
+                pg.refs += 1
+                self._touch(pg)
+            else:
+                pg = self._alloc(stage, tok, pu, h, n)
+                pg.refs = 1
+            pages.append(pg.pid)
+            total += tok
+        # drop the apply_prefix_hits holds (stream refs now pin the hits)
+        for pid in n.payload.pop("kv_hit_pages", ()):
+            pg = self._pages.get(pid)
+            if pg is not None:
+                pg.refs = max(pg.refs - 1, 0)
+        skey = n.payload.get("kv_stream")
+        if skey is None:
+            for pid in pages:                # no linked stream: cache only
+                self._pages[pid].refs = max(self._pages[pid].refs - 1, 0)
+            return
+        st = self._streams.get(skey)
+        if st is None:
+            st = self._streams[skey] = PagedStream(stage=stage, pu=pu,
+                                                   ctx_tokens=0)
+        st.pages.extend(pages)
+        st.ctx_tokens += total
+        if st.pu is None:
+            st.pu = pu
+
+    # -- drain queues (backend accounting) -----------------------------------
+    def drain_events(self) -> List[Tuple[str, Node]]:
+        ev, self._events = self._events, []
+        return ev
+
+    def drain_transfers(self) -> List[Tuple[str, str, str, int]]:
+        t, self._transfers = self._transfers, []
+        return t

@@ -30,6 +30,11 @@ heterogeneous SoCs:
 The subsystem is gated by ``SchedulerConfig.kv_residency`` — off, the
 scheduler keeps the legacy constant and migration stays free physics,
 bit-identical to the PR 2/3/4 goldens.
+
+``core/kv_pages.py`` supersedes this monolithic footprint with a
+page-table tracker (tiered store + prefix cache) behind the same
+protocol; this class remains the ``kv_residency`` implementation and
+the shared vocabulary (``stream_key`` / ``_kv_members``) both use.
 """
 from __future__ import annotations
 
@@ -195,8 +200,17 @@ class KVResidency:
         ``served`` more tokens on ``pu``; a member that *left* (finished)
         frees its footprint."""
         if left:
-            self._streams.pop(stream_key(m), None)
+            self.release(m)
             return
         st = self._ensure(m)
         st.pu = pu
         st.ctx_tokens += max(int(served), 0)
+
+    def release(self, m: Node) -> None:
+        """Terminal release of ``m``'s stream.  ``mark_done`` calls this
+        unconditionally for every finished stream — including members of
+        an un-configured round and streams whose final boundary never
+        fired — so no stream identity can keep its footprint registered
+        until session end (total resident bytes return to zero once every
+        stream has finished)."""
+        self._streams.pop(stream_key(m), None)

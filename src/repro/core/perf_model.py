@@ -61,6 +61,9 @@ class PU:
     # "larger batches do not always yield better per-item efficiency".
     batch_sweet: int = 64
     spill: float = 0.5
+    # bytes of PU-local KV arena the runtime pins for resident caches
+    # (paged-KV tier 0); 0 = unbounded (tiering effectively off for this PU)
+    kv_arena: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -71,6 +74,12 @@ class SoCSpec:
     # φ shape parameters: φ(B) = 1 + gamma * max(0, B/B0 - knee)^2
     phi_knee: float = 0.20
     phi_gamma: float = 3.0
+    # paged-KV spill tiers: shared-DRAM pool bytes reserved for evicted KV
+    # pages (tier 1) and the storage read bandwidth behind the disk tier
+    # (tier 2, UFS-class).  0 = unbounded pool / a conservative fraction of
+    # DRAM bandwidth for the disk path.
+    kv_dram_pool: float = 0.0
+    disk_bw: float = 0.0
 
     def pu(self, name: str) -> PU:
         for p in self.pus:
@@ -88,17 +97,20 @@ def snapdragon_8gen3() -> SoCSpec:
             PU("cpu", "cpu", peak_flops=140e9, mem_bw=0.55 * bw,
                overhead=3e-5, step_overhead=1e-5, eff_batch=0.55,
                eff_stream=0.60, mem_eff_stream=0.70, tile=4,
-               tile_penalty=0.15, batch_sweet=128, spill=0.15),
+               tile_penalty=0.15, batch_sweet=128, spill=0.15,
+               kv_arena=384e6),
             PU("gpu", "gpu", peak_flops=2.8e12, mem_bw=0.80 * bw,
                overhead=8e-4, step_overhead=2e-4, eff_batch=0.15,
                eff_stream=0.50, mem_eff_stream=0.35, tile=16,
-               tile_penalty=0.30, batch_sweet=48, spill=0.55),
+               tile_penalty=0.30, batch_sweet=48, spill=0.55,
+               kv_arena=512e6),
             PU("npu", "npu", peak_flops=34e12, mem_bw=0.85 * bw,
                overhead=4e-3, step_overhead=3e-3, eff_batch=0.52,
                eff_stream=0.30, mem_eff_stream=0.30, tile=32,
-               tile_penalty=0.45, batch_sweet=32, spill=0.85),
+               tile_penalty=0.45, batch_sweet=32, spill=0.85,
+               kv_arena=256e6),
         ),
-        dram_bw=bw)
+        dram_bw=bw, kv_dram_pool=2e9, disk_bw=3.5e9)
 
 
 def snapdragon_8gen4() -> SoCSpec:
@@ -110,17 +122,20 @@ def snapdragon_8gen4() -> SoCSpec:
             PU("cpu", "cpu", peak_flops=210e9, mem_bw=0.55 * bw,
                overhead=2.5e-5, step_overhead=8e-6, eff_batch=0.58,
                eff_stream=0.62, mem_eff_stream=0.75, tile=4,
-               tile_penalty=0.15, batch_sweet=128, spill=0.15),
+               tile_penalty=0.15, batch_sweet=128, spill=0.15,
+               kv_arena=384e6),
             PU("gpu", "gpu", peak_flops=3.4e12, mem_bw=0.80 * bw,
                overhead=7e-4, step_overhead=1.6e-4, eff_batch=0.22,
                eff_stream=0.52, mem_eff_stream=0.50, tile=16,
-               tile_penalty=0.30, batch_sweet=48, spill=0.55),
+               tile_penalty=0.30, batch_sweet=48, spill=0.55,
+               kv_arena=512e6),
             PU("npu", "npu", peak_flops=50e12, mem_bw=0.85 * bw,
                overhead=3.5e-3, step_overhead=2.5e-3, eff_batch=0.55,
                eff_stream=0.32, mem_eff_stream=0.30, tile=32,
-               tile_penalty=0.45, batch_sweet=32, spill=0.85),
+               tile_penalty=0.45, batch_sweet=32, spill=0.85,
+               kv_arena=256e6),
         ),
-        dram_bw=bw)
+        dram_bw=bw, kv_dram_pool=2e9, disk_bw=3.5e9)
 
 
 def tpu_v5e_slices(slices: Dict[str, int]) -> SoCSpec:
@@ -308,6 +323,51 @@ class GroundTruthPerf:
         by = stage.kv_bytes_per_token() * max(ctx_tokens, 0)
         return by / self.link_bandwidth(src, dst) + dst.overhead
 
+    # -- paged-KV tier model (kv_pages subsystem) -------------------------
+    # Tier names are PU names (tier 0, pinned arenas), "dram" (tier 1,
+    # shared spill pool) and "disk" (tier 2, UFS-class storage).
+
+    def kv_capacity(self, tier: str) -> float:
+        """Capacity in bytes of one KV tier; ``inf`` = unbounded (specs
+        that predate the tier model, e.g. TPU slices, never evict)."""
+        if tier == "disk":
+            return float("inf")
+        if tier == "dram":
+            return self.soc.kv_dram_pool or float("inf")
+        return self.soc.pu(tier).kv_arena or float("inf")
+
+    def _tier_bw(self, tier: str, pu: PU) -> float:
+        """Effective copy bandwidth between a spill tier and a PU arena."""
+        if tier == "disk":
+            # storage reads stream at the UFS link, never above what the
+            # PU side can absorb; unspecified = a conservative DRAM slice
+            return min(self.soc.disk_bw or 0.05 * self.soc.dram_bw,
+                       pu.mem_bw)
+        # dram pool <-> PU arena: one read + one write over the shared bus
+        return min(0.5 * self.soc.dram_bw, pu.mem_bw)
+
+    def tier_transfer_cost(self, stage: StageModel, src: str, dst: str,
+                           tokens: int) -> float:
+        """Seconds to move ``tokens`` of ``stage``'s KV pages between two
+        tiers (uncontended, like every other p0).  PU→PU pairs delegate to
+        :meth:`migrate_cost` so the paged path prices link hops identically
+        to the monolithic tracker."""
+        if src == dst:
+            return 0.0
+        names = {p.name for p in self.soc.pus}
+        if src in names and dst in names:
+            return self.migrate_cost(stage, self.soc.pu(src),
+                                     self.soc.pu(dst), tokens)
+        by = stage.kv_bytes_per_token() * max(tokens, 0)
+        if src in names:                       # spill: arena -> pool/disk
+            return by / self._tier_bw(dst, self.soc.pu(src))
+        if dst in names:                       # fetch: pool/disk -> arena
+            p = self.soc.pu(dst)
+            return by / self._tier_bw(src, p) + p.overhead
+        # dram <-> disk (cascade demotion): storage link is the bottleneck
+        bw = self.soc.disk_bw or 0.05 * self.soc.dram_bw
+        return by / bw
+
     def phi(self, stage: StageModel, B: float) -> float:
         """Contention slowdown φ_v(B) ≥ 1 (Eq. 1)."""
         soc = self.soc
@@ -351,6 +411,13 @@ class LinearPerfModel:
         # per-stage KV bytes per context token (copied exactly from the
         # profiled StageModels) — the residency tracker's footprint unit
         self.kv_bytes: Dict[str, float] = {}
+        # paged-KV tier profile: (stage, src_tier, dst_tier) ->
+        # (intercept, seconds-per-token) lines for spill/fetch hops that
+        # involve the "dram"/"disk" tiers (PU↔PU pairs live in
+        # migrate_coef), plus the profiled per-tier capacities in bytes
+        # (0 = unbounded) the page table evicts against
+        self.fetch_coef: Dict[Tuple[str, str, str], Tuple[float, float]] = {}
+        self.kv_tiers: Dict[str, float] = {}
 
     @staticmethod
     def _feats(n: np.ndarray, tile: int) -> np.ndarray:
@@ -432,6 +499,22 @@ class LinearPerfModel:
                     a, b = np.linalg.lstsq(X, np.array(ys), rcond=None)[0]
                     self.migrate_coef[(sname, src.name, dst.name)] = (
                         float(a), float(b))
+            # tier spill/fetch lines (paged KV): arena <-> dram/disk per
+            # decode stage — sampled on the same ctx grid, after every
+            # noisy fit so the rng stream stays byte-identical
+            for p in pus:
+                for tier in ("dram", "disk"):
+                    for src, dst in ((p.name, tier), (tier, p.name)):
+                        ys = [gt.tier_transfer_cost(stage, src, dst, int(c))
+                              for c in ctx]
+                        a, b = np.linalg.lstsq(X, np.array(ys),
+                                               rcond=None)[0]
+                        self.fetch_coef[(sname, src, dst)] = (float(a),
+                                                              float(b))
+        self.kv_tiers = {p.name: p.kv_arena for p in gt.soc.pus
+                         if p.kind != "io"}
+        self.kv_tiers["dram"] = gt.soc.kv_dram_pool
+        self.kv_tiers["disk"] = 0.0
         return self
 
     # context-length grid the migration-cost line is sampled on (tokens)
@@ -450,6 +533,24 @@ class LinearPerfModel:
         if co is None:
             return None
         return max(co[0] + co[1] * max(ctx_tokens, 0), 0.0)
+
+    def fetch_cost(self, stage: str, src: str, dst: str,
+                   tokens: int) -> Optional[float]:
+        """Modeled seconds to move ``tokens`` of ``stage``'s KV pages
+        between tiers.  PU↔PU pairs resolve through the migration lines;
+        hops involving "dram"/"disk" through the tier-fetch lines.
+        ``None`` for profiles that predate either grid."""
+        if src == dst:
+            return 0.0
+        co = self.fetch_coef.get((stage, src, dst))
+        if co is not None:
+            return max(co[0] + co[1] * max(tokens, 0), 0.0)
+        return self.migrate_cost(stage, src, dst, tokens)
+
+    def kv_capacity(self, tier: str) -> float:
+        """Profiled byte capacity of one KV tier (inf = unbounded)."""
+        cap = self.kv_tiers.get(tier, 0.0)
+        return cap or float("inf")
 
     # decode-batching profile grid: widths × token groups (width 1 lives in
     # the ordinary table; the scheduler's group candidates are clipped to
@@ -505,6 +606,9 @@ class LinearPerfModel:
             "migrate_coef": {f"{s}|{a}|{b}": list(v) for (s, a, b), v in
                              self.migrate_coef.items()},
             "kv_bytes": dict(self.kv_bytes),
+            "fetch_coef": {f"{s}|{a}|{b}": list(v) for (s, a, b), v in
+                           self.fetch_coef.items()},
+            "kv_tiers": dict(self.kv_tiers),
             "tiles": self._tiles, "b0": self._b0,
         }
         with open(path, "w") as f:
@@ -539,6 +643,11 @@ class LinearPerfModel:
         m.migrate_coef = {tuple(k.split("|")): tuple(v)
                           for k, v in blob.get("migrate_coef", {}).items()}
         m.kv_bytes = dict(blob.get("kv_bytes", {}))
+        # paged-KV tier profile (absent in pre-paging profile files:
+        # fetch_cost falls back to migrate lines, capacities to unbounded)
+        m.fetch_coef = {tuple(k.split("|")): tuple(v)
+                        for k, v in blob.get("fetch_coef", {}).items()}
+        m.kv_tiers = dict(blob.get("kv_tiers", {}))
         m._tiles = blob["tiles"]
         m._b0 = blob["b0"]
         return m

@@ -31,6 +31,7 @@ from repro.core import criticality as crit
 from repro.core.batch_policy import ArrivalTracker, make_policy
 from repro.core.dag import (DynamicDAG, Node, WorkflowTemplate,
                             resolve_prefer_pu)
+from repro.core.kv_pages import PagedKVCache
 from repro.core.kv_residency import KVResidency
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     shape_aware_configs)
@@ -80,6 +81,17 @@ class SchedulerConfig:
     # constant and free migration physics, bit-identical to the
     # PR 2/3/4 goldens.
     kv_residency: bool = False
+    # paged KV cache (core/kv_pages.py): supersedes the monolithic
+    # kv_residency tracker with a page table — fixed-size pages in a
+    # tiered store (PU arenas → DRAM pool → disk, LRU-with-pin eviction),
+    # page-granular migration pricing, and a content-hash prefix cache
+    # that lets prefill nodes skip resident shared-context pages
+    # (cross-query reuse).  Implies residency tracking; off = bit-identical
+    # to the PR 2/3/5 goldens (kv_residency decides the tracker as before)
+    kv_pages: bool = False
+    # tokens per KV page (page bytes = this × the stage's profiled GQA
+    # cache bytes/token)
+    kv_page_tokens: int = 64
     # migration pricing under kv_residency: "modeled" (footprint ÷ link
     # bandwidth) or "constant" (keep the legacy constant while still
     # tracking and charging real transfers — the mischarging baseline the
@@ -104,6 +116,11 @@ class Dispatch:
     batch: int
     predicted_p0: float
     bandwidth: float
+    # modeled one-off KV-migration seconds this dispatch pays before its
+    # passes start (0 without a residency tracker): both backends add it
+    # to the dispatch ETA, and busy-PU candidates see it in busy_until —
+    # a queued placement no longer looks cheaper than it is
+    migrate_s: float = 0.0
 
 
 class HeroScheduler:
@@ -122,9 +139,17 @@ class HeroScheduler:
         if self.cfg.migrate_pricing not in ("modeled", "constant"):
             raise KeyError(f"migrate_pricing {self.cfg.migrate_pricing!r}; "
                            f"pick from ['modeled', 'constant']")
-        # KV-residency tracker: per-stream cache placement + footprints,
-        # shared with the DAG (boundary events) and the batching policy
-        self.kv = KVResidency(perf) if self.cfg.kv_residency else None
+        # KV tracker: per-stream cache placement + footprints, shared with
+        # the DAG (boundary events) and the batching policy.  kv_pages
+        # selects the page-table tracker (tiered store + prefix cache);
+        # kv_residency the monolithic one; neither = the legacy constant
+        if self.cfg.kv_pages:
+            self.kv = PagedKVCache(perf,
+                                   page_tokens=self.cfg.kv_page_tokens)
+        elif self.cfg.kv_residency:
+            self.kv = KVResidency(perf)
+        else:
+            self.kv = None
         # batching policy (fixed constants vs online derivation from the
         # profiled grids) + the ready-pool inter-arrival EWMA it consults
         self.policy = make_policy(self.cfg, perf, kv=self.kv)
@@ -173,6 +198,12 @@ class HeroScheduler:
                 # queueing-delay estimate
                 if n.kind != "io":
                     self.arrivals.observe((n.stage, n.kind), now)
+                if (n.kind == "stream_prefill"
+                        and getattr(self.kv, "paged", False)):
+                    # prefix cache: trim the prefill by its longest
+                    # resident page-aligned prefix before any config is
+                    # enumerated for it (first-seen = exactly once)
+                    self.kv.apply_prefix_hits(n)
             elif (n.payload.get("decode_round")
                   and n.payload.get("members")):
                 # a round back in the pool (live-mode straggler
@@ -301,6 +332,7 @@ class HeroScheduler:
                         self.perf, gate_star, b, B_now, now
                     ) if (cfgn.enable_concurrency and is_idle) else 0.0
                     score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
+                    mig_s = 0.0
                     if self.kv is not None:
                         # migration priced per stream from tracked
                         # residency — rounds AND solo token-group chains
@@ -310,13 +342,20 @@ class HeroScheduler:
                         # so the one-off transfer is weighed against the
                         # whole stay: work migrates exactly when the
                         # destination's latency win repays the copy.
+                        # The charge rides the Dispatch (migrate_s) so
+                        # backend ETAs and busy_until see it too — a
+                        # busy-PU candidate queues behind the pending
+                        # migration, not just the compute passes.
                         if v_cand.kind == "stream_decode":
-                            score += self._migrate_score(v_cand, pu,
-                                                         B_now + b)
+                            mig_s = self._migrate_score(v_cand, pu,
+                                                        B_now + b)
+                            score += mig_s
                     elif (width > 1 and prefer_pu is not None
                           and pu != prefer_pu):
+                        # legacy constant: a pure score nudge, never an
+                        # ETA term (bit-exact with the kv-off goldens)
                         score += cfgn.decode_migrate_cost
-                    d = Dispatch(v_cand, pu, batch, p0, b)
+                    d = Dispatch(v_cand, pu, batch, p0, b, mig_s)
                     if best is None or score < best[0]:
                         best = (score, d, is_idle)
             if best is None or not best[2]:                     # line 15
@@ -353,7 +392,7 @@ class HeroScheduler:
             decisions.append(d)
             idle.remove(d.pu)                                   # line 18-19
             passes = ceil_passes(piece.workload, d.batch)
-            busy_until[d.pu] = now + passes * d.predicted_p0
+            busy_until[d.pu] = now + passes * d.predicted_p0 + d.migrate_s
             r_tmp = [n for n in dag.ready() if n not in
                      [x.node for x in decisions]]
         for f in fused_new:

@@ -214,13 +214,31 @@ class Simulator:
                 # streams (round members or a solo token-group chain)
                 # whose caches live on another PU pay the ground-truth
                 # transfer before the first step (contention scales it
-                # like the rest of the work)
+                # like the rest of the work).  The paged tracker gathers
+                # page-granularly and may source from the spill tiers
+                # ("dram"/"disk" — a fetch, priced by the tier model);
+                # tier_transfer_cost is migrate_cost exactly on PU pairs
                 for m, src, ctx, _by in self.sched.kv.migrate_for_dispatch(
                         d.node, d.pu):
-                    work += self.gt.migrate_cost(
-                        self.gt.stages[m.stage], self.gt.soc.pu(src), pu,
-                        ctx)
-                    self._note(timeline, now, "kv_migrate", m)
+                    sm = self.gt.stages.get(m.stage, stage)
+                    work += self.gt.tier_transfer_cost(sm, src, d.pu, ctx)
+                    self._note(timeline, now,
+                               "kv_fetch" if src in ("dram", "disk")
+                               else "kv_migrate", m)
+            if getattr(self.sched.kv, "paged", False):
+                # paged KV accounting accrued since the last dispatch:
+                # spill transfers (evictions cascading down the tiers) are
+                # charged ground-truth seconds to this dispatch — the
+                # arena-pressure physics — and page events land on the
+                # timeline (kv_page_hit / kv_evict)
+                for sname, src, dst, toks in \
+                        self.sched.kv.drain_transfers():
+                    sm = self.gt.stages.get(sname)
+                    if sm is not None:
+                        work += self.gt.tier_transfer_cost(sm, src, dst,
+                                                           toks)
+                for ev, n2 in self.sched.kv.drain_events():
+                    self._note(timeline, now, ev, n2)
         # fault injection (admission timers are control nodes — a gated
         # arrival must stay exact under injected faults)
         is_timer = d.node.payload.get("arrival") is not None
@@ -234,7 +252,11 @@ class Simulator:
         active[d.node.id] = ActiveTask(
             node=d.node, pu=d.pu, batch=d.batch, work_left=work,
             bandwidth=bw, dispatched_at=now,
-            predicted=d.predicted_p0 * dispatch_passes(d.node, d.batch))
+            # migrate_s: the scheduler's modeled one-off transfer charge —
+            # in the ETA so straggler detection and busy_until see the
+            # same total the physics above actually pays
+            predicted=(d.predicted_p0 * dispatch_passes(d.node, d.batch)
+                       + d.migrate_s))
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
         self._note(timeline, now, "start", d.node)

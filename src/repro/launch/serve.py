@@ -21,8 +21,8 @@ from repro.api import HeroSession
 from repro.configs import get_family, reduced
 from repro.models import build_model
 from repro.rag import (HashTokenizer, VectorDB, chunk_documents,
-                       default_means, sample_traces, synth_documents,
-                       synth_query)
+                       default_means, sample_traces, shared_corpus_traces,
+                       synth_documents, synth_query)
 from repro.rag.agents import LMAgent
 from repro.rag.embedder import Embedder, Reranker
 
@@ -105,12 +105,22 @@ def main():
                          "isolated single-query latency protocol)")
     ap.add_argument("--inter-arrival", type=float, default=0.5,
                     help="seconds between arrivals in --serve mode")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="turn on the paged-KV subsystem and point every "
+                         "query at one shared retrieved corpus, so later "
+                         "prefills hit the cross-query prefix cache "
+                         "(implies --serve admission)")
     args = ap.parse_args()
 
-    traces = sample_traces(args.dataset, args.queries, seed=1)
+    if args.prefix_cache:
+        args.serve = True
+        traces = shared_corpus_traces(args.dataset, args.queries, seed=1)
+    else:
+        traces = sample_traces(args.dataset, args.queries, seed=1)
     sess = HeroSession(world="sd8gen4", family="qwen3", backend="live",
                        means=default_means(traces),
                        coalesce=args.serve or None,
+                       kv_pages=args.prefix_cache or None,
                        stage_fns=build_stage_fns())
     for qi, tr in enumerate(traces):
         sess.submit(tr, wf=args.workflow,
@@ -121,10 +131,18 @@ def main():
     for res in results:
         extra = (f", {res.decode_rounds} batched decode rounds"
                  if res.decode_rounds else "")
+        if res.kv_page_hits:
+            extra += (f", {res.kv_page_hits} KV page hits "
+                      f"({res.kv_hit_tokens} prefill tokens skipped)")
         print(f"query {res.qid}: {res.n_nodes} sub-stages in "
               f"{res.makespan:.2f}s wall{extra}")
     print(f"mean wall latency: {np.mean([r.makespan for r in results]):.2f}s "
           f"over {len(results)} queries")
+    run = sess.last_run
+    if args.prefix_cache and run is not None:
+        print(f"prefix cache: {run.kv_page_hits} page hits, "
+              f"{run.kv_hit_tokens} tokens skipped, "
+              f"{run.kv_evictions} evictions")
 
 
 if __name__ == "__main__":

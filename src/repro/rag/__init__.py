@@ -6,4 +6,4 @@ from repro.rag.stages import STAGE_ROLES, build_stages  # noqa: F401
 from repro.rag.tokenizer import HashTokenizer  # noqa: F401
 from repro.rag.vectordb import VectorDB  # noqa: F401
 from repro.rag.workflow import (  # noqa: F401
-    build_workflow, default_means, make_template)
+    build_workflow, default_means, make_template, shared_corpus_traces)

@@ -32,6 +32,11 @@ class QueryTrace:
     plan_tokens: int             # planner decode length
     refine_tokens: int           # refiner decode length
     answer_tokens: int           # chat decode length
+    # identities of the retrieved chunks, in rank order — the content keys
+    # the paged-KV prefix cache hashes per page boundary.  Empty (the
+    # default, and what sample_traces emits) = no prefix identity: every
+    # prefill is unique, exactly the pre-paging behavior
+    chunk_ids: tuple = ()
 
 
 @dataclass(frozen=True)

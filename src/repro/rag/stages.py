@@ -16,6 +16,14 @@ def _kv_bytes_token(cfg: ModelConfig, bytes_per_param: float = 1.0) -> float:
             * bytes_per_param)
 
 
+def kv_page_bytes(cfg: ModelConfig, page_tokens: int = 64,
+                  bytes_per_param: float = 1.0) -> float:
+    """Bytes of one paged-KV page for this model's cache shape — the unit
+    the tiered page store allocates, demotes and fetches in
+    (``SchedulerConfig.kv_page_tokens`` × the GQA bytes/token above)."""
+    return page_tokens * _kv_bytes_token(cfg, bytes_per_param)
+
+
 def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
     e, r = family["embed"], family["rerank"]
     s, c = family["search"], family["chat"]

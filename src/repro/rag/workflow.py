@@ -53,6 +53,27 @@ def build_workflow(wf: int, trace: QueryTrace,
     return BUILDERS[wf](trace, fine_grained)
 
 
+def shared_corpus_traces(dataset: str, k: int, seed: int = 0,
+                         n_docs: int = 4, context_tokens: int = 768,
+                         chunks_per_doc: int = 4):
+    """``k`` traces over ONE shared ``n_docs``-document corpus: every
+    query retrieves the same ranked chunk list (identical ``chunk_ids``)
+    under the same context budget — the dominant serving pattern the
+    cross-query prefix cache exists for (many users asking about the same
+    few documents).  Query/answer lengths still vary per trace, so only
+    the retrieved-context prefix is shareable, exactly as in a real
+    deployment."""
+    import dataclasses
+
+    from repro.rag.datasets import sample_traces
+    traces = sample_traces(dataset, k, seed=seed)
+    chunk_ids = tuple(f"d{seed}.{i // chunks_per_doc}.c{i % chunks_per_doc}"
+                      for i in range(n_docs * chunks_per_doc))
+    return [dataclasses.replace(t, n_docs=n_docs, chunk_ids=chunk_ids,
+                                context_tokens=context_tokens)
+            for t in traces]
+
+
 # -- workflow template (future-criticality prior, Eq. 4) ---------------------
 
 def make_template(wf: int, mean: Dict[str, float]) -> WorkflowTemplate:

@@ -152,8 +152,11 @@ class HeroRuntime:
             # remaining tokens at the current group, not the residents'
             # whole horizon (dispatch_passes) — otherwise a cancellation
             # drain overestimates a partially-decoded batch's remaining
-            # work and the straggler heartbeat re-reaps it immediately
-            return d.predicted_p0 * dispatch_passes(d.node, d.batch)
+            # work and the straggler heartbeat re-reaps it immediately.
+            # migrate_s: the modeled one-off KV transfer the dispatch
+            # pays first — in the ETA exactly as the simulator counts it
+            return (d.predicted_p0 * dispatch_passes(d.node, d.batch)
+                    + d.migrate_s)
 
         def busy_until():
             return {d.pu: d_task.started - t0 + predicted_total(d)
@@ -263,10 +266,19 @@ class HeroRuntime:
             # same registration the simulator does at dispatch start, so
             # kv_migrations / bytes-moved accounting is backend-independent
             # (wall-clock transfer cost is the stage fn's to pay — here it
-            # is recorded, not slept)
-            for m, _src, _ctx, _by in self.sched.kv.migrate_for_dispatch(
+            # is recorded, not slept).  Paged trackers may gather from the
+            # spill tiers: those moves are fetches, not migrations
+            for m, src, _ctx, _by in self.sched.kv.migrate_for_dispatch(
                     d.node, d.pu):
-                self._emit(now_t, "kv_migrate", m)
+                self._emit(now_t, "kv_fetch" if src in ("dram", "disk")
+                           else "kv_migrate", m)
+        if getattr(self.sched.kv, "paged", False):
+            # paged accounting accrued since the last launch: page events
+            # reach the run timeline; spill transfers are recorded in the
+            # tracker's counters (wall-clock cost is the executors' to pay)
+            self.sched.kv.drain_transfers()
+            for ev, n2 in self.sched.kv.drain_events():
+                self._emit(now_t, ev, n2)
         if d.node.status != "running":
             dag.mark_running(d.node.id, now_t, (d.pu, d.batch))
         if d.pu == "io":

@@ -1,0 +1,398 @@
+"""Paged KV cache subsystem (page table + tiered eviction + prefix reuse).
+
+Covers the ISSUE's required invariants: chain-hash page keys (sharing
+iff the full prefix matches), pages never shared across tiers, eviction
+respects pins (LRU demotion only ever moves ``refs <= 0`` pages down the
+tiers), hit-tokens + remaining-workload == original prefix workload,
+page-granular migration pricing, goldens bit-exact with ``kv_pages``
+off, and the end-to-end shared-corpus win over the monolithic tracker.
+"""
+import json
+import os
+
+import pytest
+
+from repro.api import HeroSession
+from repro.core import SchedulerConfig
+from repro.core.dag import Node
+from repro.core.kv_pages import (DISK, DRAM, PagedKVCache, chain_hash,
+                                 page_keys)
+from repro.core.perf_model import LinearPerfModel
+from repro.core.scheduler import HeroScheduler
+from repro.rag import default_means, sample_traces, shared_corpus_traces
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+STAGE = "chat_decode"
+
+
+def paged_perf(kv_bytes=1.0, caps=None, sec_per_tok=1e-3,
+               fetch_per_tok=2e-3, pus=("cpu", "gpu", "npu")):
+    """A LinearPerfModel with handcrafted migration/fetch/tier profiles."""
+    m = LinearPerfModel()
+    m._tiles = {p: 8 for p in pus}
+    m._b0 = 1e9
+    m.kv_bytes = {STAGE: kv_bytes}
+    m.phi_coef = {STAGE: [1.0, 0.0, 0.0]}     # φ ≡ 1
+    for a in pus:
+        for b in pus:
+            if a != b:
+                m.migrate_coef[(STAGE, a, b)] = (0.0, sec_per_tok)
+    for p in pus:
+        for tier in (DRAM, DISK):
+            m.fetch_coef[(STAGE, p, tier)] = (0.0, fetch_per_tok)
+            m.fetch_coef[(STAGE, tier, p)] = (0.0, fetch_per_tok)
+    m.kv_tiers = dict(caps or {})             # unset tiers are unbounded
+    return m
+
+
+def decode_node(nid, ctx=0, workload=16, **payload):
+    return Node(id=nid, stage=STAGE, kind="stream_decode",
+                workload=workload, payload={"kv_ctx": ctx, **payload})
+
+
+def round_node(members, workload=16):
+    return Node("dround:x", STAGE, "stream_decode", workload,
+                payload={"members": list(members), "decode_round": True})
+
+
+def prefill_node(nid, segments, stream=None):
+    workload = sum(t for _k, t in segments)
+    payload = {"prefix_segments": tuple(segments)}
+    if stream is not None:
+        payload["kv_stream"] = stream
+    return Node(id=nid, stage="chat_prefill", kind="stream_prefill",
+                workload=workload, payload=payload)
+
+
+def check_invariants(kv: PagedKVCache):
+    """Pages live in exactly one tier, and per-tier byte accounting
+    matches the pages actually there."""
+    seen = {}
+    for tier, pids in kv._tier_pages.items():
+        for pid in pids:
+            assert pid not in seen, \
+                f"page {pid} in both {seen[pid]} and {tier}"
+            seen[pid] = tier
+            assert kv._pages[pid].tier == tier
+    assert set(seen) == set(kv._pages)
+    for tier in kv._tier_pages:
+        used = sum(kv._page_bytes(kv._pages[p])
+                   for p in kv._tier_pages[tier])
+        assert kv._tier_used.get(tier, 0.0) == pytest.approx(used)
+
+
+# --- page keys ---------------------------------------------------------------
+
+def test_page_keys_chain_identity_and_divergence():
+    shared = [("ctx:a", 100), ("q:one", 30)]
+    a = page_keys(shared, 64)
+    b = page_keys([("ctx:a", 100), ("q:one", 30)], 64)
+    assert a == b                             # same content, same chain
+    assert sum(t for _h, t in a) == 130
+    assert [t for _h, t in a] == [64, 64, 2]
+    # divergence in a later segment: the pages fully inside the shared
+    # head keep their hashes, everything at/after the split differs
+    c = page_keys([("ctx:a", 100), ("q:two", 30)], 64)
+    assert c[0] == a[0]                       # pure ctx page
+    assert c[1] != a[1]                       # page mixing ctx + question
+    assert c[2] != a[2]                       # chained past the split
+    # divergence in the head invalidates every page (chain hashing)
+    d = page_keys([("ctx:b", 100), ("q:one", 30)], 64)
+    assert all(x != y for x, y in zip(d, a))
+
+
+def test_chain_hash_depends_on_prev():
+    assert chain_hash(None, "x") != chain_hash("p", "x")
+    assert chain_hash("p", "x") == chain_hash("p", "x")
+
+
+# --- prefix cache: hits, conservation, pinning -------------------------------
+
+def test_prefix_hit_conservation_and_reuse():
+    kv = PagedKVCache(paged_perf(), page_tokens=64)
+    segs = [("ctx:a", 128), ("q:q0", 40)]
+    warm = prefill_node("q0/p", segs)
+    kv.apply_prefix_hits(warm)                # cold: nothing resident
+    assert "kv_page_hits" not in warm.payload and warm.workload == 168
+    kv.on_prefill_done(warm, "gpu")           # cache-only (no kv_stream)
+    check_invariants(kv)
+
+    hit = prefill_node("q1/p", segs)
+    kv.apply_prefix_hits(hit)
+    # trim keeps >= 1 token so the node still anchors its successors
+    assert hit.payload["kv_hit_tokens"] + hit.workload == 168
+    assert hit.workload == 1
+    assert hit.payload["kv_page_hits"] == 3
+    assert kv.hits == 3 and kv.hit_tokens == 167
+    # hit pages are pinned until prefill completion adopts them
+    held = [kv._pages[p] for p in hit.payload["kv_hit_pages"]]
+    assert all(pg.refs > 0 for pg in held)
+    kv.on_prefill_done(hit, "gpu")
+    assert "kv_hit_pages" not in hit.payload  # holds dropped
+    assert all(pg.refs == 0 for pg in held)   # cache-only again
+    check_invariants(kv)
+    # idempotent: re-applying (straggler re-visit) changes nothing
+    kv.apply_prefix_hits(hit)
+    assert kv.hits == 3
+
+
+def test_partial_prefix_hits_stop_at_divergence():
+    kv = PagedKVCache(paged_perf(), page_tokens=64)
+    kv.on_prefill_done(prefill_node("q0/p", [("ctx:a", 128), ("q:q0", 40)]),
+                       "gpu")
+    other = prefill_node("q1/p", [("ctx:a", 128), ("q:q1", 40)])
+    kv.apply_prefix_hits(other)
+    # only the two pure-ctx pages match; the mixed page diverges
+    assert other.payload["kv_page_hits"] == 2
+    assert other.payload["kv_hit_tokens"] == 128
+    assert other.workload == 40
+
+
+def test_prefill_done_links_pages_to_stream():
+    kv = PagedKVCache(paged_perf(), page_tokens=64)
+    p = prefill_node("q0/p", [("ctx:a", 128)], stream="q0/d")
+    kv.on_prefill_done(p, "gpu")
+    d = decode_node("q0/d", ctx=128, workload=16)
+    d.group = "q0/d"
+    st = kv.tracked(d) or kv._streams.get("q0/d")
+    assert st is not None and st.ctx_tokens == 128 and len(st.pages) == 2
+    assert all(kv._pages[pid].refs == 1 for pid in st.pages)
+    # the linked stream re-dispatches on its own PU free of migrations
+    assert kv.migrate_for_dispatch(round_node([d]), "gpu") == []
+    assert kv.migrations == 0
+    kv.release(d)
+    # hashed pages survive release at refs == 0 (the prefix cache)
+    assert all(kv._pages[pid].refs == 0 for pid in st.pages)
+    check_invariants(kv)
+
+
+# --- tiered store: eviction respects pins ------------------------------------
+
+def test_lru_eviction_demotes_unpinned_only():
+    # gpu arena: 12 bytes = 3 pages of 4 tokens at 1 B/token
+    kv = PagedKVCache(paged_perf(caps={"gpu": 12.0, "dram": 8.0}),
+                      page_tokens=4)
+    kv.on_prefill_done(prefill_node("q0/p", [("ctx:a", 12)]), "gpu")
+    assert kv.resident_bytes("gpu") == 12.0   # full, all unpinned
+    a = decode_node("q0/d", ctx=8, workload=1 << 20)
+    kv.migrate_for_dispatch(round_node([a]), "gpu")   # pins 8 B on gpu
+    check_invariants(kv)
+    # two LRU prefix pages demoted to dram; stream pages stayed
+    assert kv.evictions == 2
+    assert kv.resident_bytes(DRAM) == 8.0
+    assert kv.resident_bytes("gpu") == 12.0
+    st = kv.tracked(a)
+    assert all(kv._pages[pid].tier == "gpu" for pid in st.pages)
+    assert [t for t in kv.drain_transfers()] == [
+        (STAGE, "gpu", DRAM, 4), (STAGE, "gpu", DRAM, 4)]
+    assert [e for e, _n in kv.drain_events()] == ["kv_evict", "kv_evict"]
+    # dram itself is full now: the next demotion cascades to disk
+    b = decode_node("q1/d", ctx=4, workload=1 << 20)
+    kv.migrate_for_dispatch(round_node([b]), "gpu")
+    check_invariants(kv)
+    assert kv.resident_bytes(DISK) == 4.0
+    # all-pinned arena soft-overflows rather than touching live streams
+    c = decode_node("q2/d", ctx=8, workload=1 << 20)
+    kv.migrate_for_dispatch(round_node([c]), "gpu")
+    check_invariants(kv)
+    assert kv.resident_bytes("gpu") > 12.0    # overflow, streams intact
+    for st2 in kv._streams.values():
+        assert all(kv._pages[pid].tier == "gpu" for pid in st2.pages)
+
+
+def test_page_granular_migration_and_fetch_accounting():
+    kv = PagedKVCache(paged_perf(caps={"gpu": 8.0}), page_tokens=4)
+    # 3 pages: arena holds 2, prefix page demotes when the stream pins it
+    kv.on_prefill_done(prefill_node("q0/p", [("ctx:a", 4)]), "gpu")
+    a = decode_node("q0/d", ctx=8, workload=1 << 20)
+    kv.migrate_for_dispatch(round_node([a]), "gpu")
+    assert kv.resident_bytes(DRAM) == 4.0
+    # a later query hits the demoted page: dispatching its decode fetches
+    # it back (a fetch, not a migration) while the stream pages are local
+    hit = prefill_node("q1/p", [("ctx:a", 4), ("q:q1", 4)], stream="q1/d")
+    kv.apply_prefix_hits(hit)
+    assert hit.payload["kv_page_hits"] == 1
+    kv.on_prefill_done(hit, "gpu")
+    b = decode_node("q1/d", ctx=8, workload=1 << 20)
+    b.group = "q1/d"
+    moved = kv.migrate_for_dispatch(round_node([b]), "gpu")
+    assert [(src, toks) for _m, src, toks, _by in moved] == [(DRAM, 4)]
+    assert kv.fetches == 1 and kv.fetched_bytes == 4.0
+    assert kv.migrations == 0                 # PU↔PU only
+    check_invariants(kv)
+
+
+def test_migrate_penalty_prices_only_nonresident_pages():
+    kv = PagedKVCache(paged_perf(sec_per_tok=1e-3, fetch_per_tok=2e-3),
+                      page_tokens=4)
+    a = decode_node("q0/d", ctx=16, workload=1 << 20)
+    kv.migrate_for_dispatch(round_node([a]), "gpu")
+    r = round_node([a])
+    assert kv.migrate_penalty(r, "gpu") == (0, 0.0)       # resident: free
+    moving, cost = kv.migrate_penalty(r, "cpu")
+    assert moving == 1 and cost == pytest.approx(16 * 1e-3)
+    # demote one page to dram by hand: the penalty mixes fetch + migrate
+    pg = kv._pages[kv.tracked(a).pages[0]]
+    pg.refs = 0
+    kv._place(pg, DRAM)
+    moving, cost = kv.migrate_penalty(r, "cpu")
+    assert moving == 1
+    assert cost == pytest.approx(12 * 1e-3 + 4 * 2e-3)
+    # back on gpu only the dram page pays (page-granular partial move)
+    moving, cost = kv.migrate_penalty(r, "gpu")
+    assert moving == 1 and cost == pytest.approx(4 * 2e-3)
+
+
+# --- scheduler gate ----------------------------------------------------------
+
+def test_scheduler_kv_pages_gate():
+    perf = paged_perf()
+    off = HeroScheduler(perf, ["cpu", "gpu", "npu"], 1e9, SchedulerConfig())
+    assert off.kv is None
+    on = HeroScheduler(perf, ["cpu", "gpu", "npu"], 1e9,
+                       SchedulerConfig(kv_pages=True, kv_page_tokens=32))
+    assert isinstance(on.kv, PagedKVCache)
+    assert on.kv.page_tokens == 32
+    assert on.policy.kv is on.kv
+
+
+# --- hypothesis properties ---------------------------------------------------
+
+def test_pages_exclusive_tiers_and_pins_respected():
+    hyp = pytest.importorskip("hypothesis")
+    st_ = pytest.importorskip("hypothesis.strategies")
+
+    PUS = ("cpu", "gpu", "npu")
+
+    @hyp.given(st_.lists(st_.tuples(st_.integers(0, 2),   # stream index
+                                    st_.integers(0, 2),   # pu index
+                                    st_.integers(0, 3)),  # op selector
+                         min_size=1, max_size=50),
+               st_.lists(st_.integers(0, 120), min_size=3, max_size=3))
+    @hyp.settings(max_examples=50, deadline=None)
+    def prop(ops, ctxs):
+        # tiny arenas so demotion happens constantly
+        kv = PagedKVCache(paged_perf(caps={"cpu": 64.0, "gpu": 64.0,
+                                           "npu": 64.0, "dram": 96.0}),
+                          page_tokens=8)
+        # seed evictable prefix pages
+        kv.on_prefill_done(prefill_node("seed/p", [("ctx:s", 40)]), "gpu")
+        nodes = [decode_node(f"q{i}/d", ctx=ctxs[i], workload=1 << 20)
+                 for i in range(3)]
+        for si, pi, op in ops:
+            m, pu = nodes[si], PUS[pi]
+            before = {pid: (pg.tier, pg.refs)
+                      for pid, pg in kv._pages.items()}
+            if op in (0, 1):
+                kv.migrate_for_dispatch(round_node([m]), pu)
+            elif op == 2:
+                if kv.tracked(m) is not None:
+                    kv.on_boundary(m, pu, 8)
+            else:
+                kv.release(m)
+            check_invariants(kv)
+            # eviction respects pins: a page pinned before the op never
+            # moved DOWN to a spill tier (PU→PU gathers are fine; pages
+            # whose pins were dropped by the op itself are exempt)
+            for pid, (tier, refs) in before.items():
+                pg = kv._pages.get(pid)
+                if pg is None or refs <= 0 or pg.refs <= 0:
+                    continue
+                if tier not in (DRAM, DISK):
+                    assert pg.tier not in (DRAM, DISK)
+        for m in nodes:
+            kv.release(m)
+        check_invariants(kv)
+        # only unpinned prefix-cache pages may remain
+        assert all(pg.refs == 0 and pg.hash is not None
+                   for pg in kv._pages.values())
+
+    prop()
+
+
+def test_hit_plus_miss_tokens_conserve_prefix():
+    hyp = pytest.importorskip("hypothesis")
+    st_ = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st_.integers(1, 5),            # shared segments warmed
+               st_.lists(st_.integers(1, 90), min_size=1, max_size=6),
+               st_.integers(1, 64))           # page size
+    @hyp.settings(max_examples=60, deadline=None)
+    def prop(warm_k, seg_tokens, page_tokens):
+        segs = [(f"s{i}", t) for i, t in enumerate(seg_tokens)]
+        kv = PagedKVCache(paged_perf(), page_tokens=page_tokens)
+        kv.on_prefill_done(prefill_node("w/p", segs[:warm_k]), "gpu")
+        n = prefill_node("q/p", segs)
+        total = n.workload
+        kv.apply_prefix_hits(n)
+        hit = n.payload.get("kv_hit_tokens", 0)
+        # conservation: skipped + remaining == the original prefix
+        assert hit + n.workload == total
+        assert n.workload >= 1
+        # hits never exceed the warmed prefix
+        assert hit <= sum(t for _k, t in segs[:warm_k])
+        if hit:
+            assert kv.hit_tokens == hit
+
+    prop()
+
+
+# --- goldens: kv_pages off is bit-identical ----------------------------------
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("hotpotqa", 8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def means(traces):
+    return default_means(traces)
+
+
+def test_goldens_bit_identical_with_pages_off(traces, means):
+    """kv_pages=False (the default) keeps both the PR 2 coalesce-off and
+    PR 3 continuous-decode goldens bit-exact: no page table, no prefix
+    trimming, no tier charges."""
+    with open(os.path.join(GOLDEN_DIR, "pr2_coalesce_off.json")) as f:
+        pr2 = json.load(f)
+    with open(os.path.join(GOLDEN_DIR, "pr3_decode_batch.json")) as f:
+        pr3 = json.load(f)
+    for coalesce, golden in ((False, pr2["staggered8_w1_makespans"]),
+                             (True, pr3["saturated8_w1_decode_makespans"])):
+        sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                           coalesce=coalesce, batch_policy="fixed",
+                           kv_pages=False)
+        for qi, tr in enumerate(traces):
+            sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+        got = [r.makespan for r in sess.run()]
+        assert got == pytest.approx(golden, rel=1e-12)
+        assert sess.last_run.kv_page_hits == 0
+        assert sess.last_run.kv_hit_tokens == 0
+
+
+# --- end-to-end: shared-corpus prefix reuse ----------------------------------
+
+def test_shared_corpus_prefix_reuse_beats_pages_off():
+    traces = shared_corpus_traces("hotpotqa", 8, seed=3)
+    runs = {}
+    for label, kw in (("off", dict(kv_residency=True)),
+                      ("pages", dict(kv_pages=True))):
+        sess = HeroSession(world="sd8gen4", family="qwen3", strategy="hero",
+                           coalesce=True, batch_policy="adaptive", **kw)
+        for qi, tr in enumerate(traces):
+            sess.submit(tr, wf=1, arrival_time=qi * 0.5)
+        res = sess.run()
+        runs[label] = (max(r.finish_time for r in res), res, sess.last_run)
+    total_off, _res_off, run_off = runs["off"]
+    total_on, res_on, run_on = runs["pages"]
+    assert run_off.kv_page_hits == 0          # monolith can't hit
+    assert run_on.kv_page_hits > 0
+    assert run_on.kv_hit_tokens > 0
+    # per-query attribution sums to the run total, and at least one
+    # later query actually skipped prefill work
+    assert sum(r.kv_page_hits for r in res_on) == run_on.kv_page_hits
+    assert sum(r.kv_hit_tokens for r in res_on) == run_on.kv_hit_tokens
+    assert any(e[1] == "kv_page_hit" for e in run_on.events)
+    # the reuse must buy wall-clock, the reason the subsystem exists
+    assert total_on < total_off

@@ -358,5 +358,11 @@ def test_total_bytes_charged_equals_boundary_deltas():
                 kv.on_boundary(m, pu, 16)
         assert kv.migrations == expect_migs
         assert kv.bytes_moved == pytest.approx(expect_bytes)
+        # terminal conservation: mark_done releases every stream (even
+        # ones whose final boundary never fired), so nothing stays
+        # registered once all streams have finished
+        for m in nodes:
+            kv.release(m)
+        assert kv.resident_bytes() == 0.0
 
     prop()
