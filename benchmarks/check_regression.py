@@ -96,6 +96,17 @@ def compare(current: dict, baseline: dict, tol: float):
                     f"{cur_row.get('kv_hit_tokens', 0)}, evictions: "
                     f"{base_row.get('kv_evictions', 0)} -> "
                     f"{cur_row.get('kv_evictions', 0)}")
+            # predictive-prefetch telemetry: staging groups and the staged
+            # pages the gather found resident (informational; the prefix-
+            # regime structural claim below is what enforces activity)
+            if (cur_row.get("kv_prefetches")
+                    or base_row.get("kv_prefetches")):
+                report.append(
+                    f"{regime}/{variant} kv_prefetches: "
+                    f"{base_row.get('kv_prefetches', 0)} -> "
+                    f"{cur_row.get('kv_prefetches', 0)}, prefetch_hits: "
+                    f"{base_row.get('kv_prefetch_hits', 0)} -> "
+                    f"{cur_row.get('kv_prefetch_hits', 0)}")
     # structural serving claims, checked on whatever regimes this leg ran:
     # continuous decode batching keeps its p99 win over stage coalescing
     # under saturating arrivals, and the adaptive policy keeps its win
@@ -135,6 +146,24 @@ def compare(current: dict, baseline: dict, tol: float):
             regressions.append(
                 f"prefix: hero+pages p99 {pages['p99']:.2f}s no longer "
                 f"beats pages-off hero+kv p99 {off['p99']:.2f}s")
+    # predictive prefetch earns its keep on the same regime: the spill-
+    # resident hit pages MUST get staged (nonzero prefetches — the hot
+    # prefix chains are demoted between reuses by design), and the
+    # overlapped staging must never leave p99 worse than the pages-only
+    # cell (tier traffic is small against compute on this profile, so
+    # the bound is exact, not a percentage band)
+    pfc = pre.get("hero+prefetch")
+    if pfc and pages:
+        if not pfc.get("kv_prefetches"):
+            regressions.append(
+                "prefix: hero+prefetch issued zero prefetch stagings on "
+                "the hot/cold regime — the spill-resident-hit case the "
+                "prefetcher exists for")
+        if pfc["p99"] > pages["p99"]:
+            regressions.append(
+                f"prefix: hero+prefetch p99 {pfc['p99']:.4f}s exceeds "
+                f"pages-only hero+pages p99 {pages['p99']:.4f}s — "
+                "overlapped staging must not cost latency")
     return report, regressions, missing
 
 

@@ -113,18 +113,23 @@ KV_VARIANTS = (
                      kv_residency=True)),
     ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
                         kv_pages=True)),
+    ("hero+prefetch", dict(coalesce=True, batch_policy="adaptive",
+                           kv_pages=True, kv_prefetch=True)),
 )
 
 # the prefix regime's variant set: fixed caps, the monolithic KV tracker
 # (pages off — the comparator the structural claim is judged against),
-# and the paged subsystem whose cross-query prefix cache is the lever
-# this regime exercises
+# the paged subsystem whose cross-query prefix cache is the lever this
+# regime exercises, and the paged subsystem with predictive tier
+# prefetch (spill-resident hit pages staged under compute overlap)
 PREFIX_VARIANTS = (
     ("hero+decode_batch", dict(coalesce=True)),
     ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
                      kv_residency=True)),
     ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
                         kv_pages=True)),
+    ("hero+prefetch", dict(coalesce=True, batch_policy="adaptive",
+                           kv_pages=True, kv_prefetch=True)),
 )
 
 
@@ -157,6 +162,14 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
             "kv_page_hits": int(sess.last_run.kv_page_hits),
             "kv_hit_tokens": int(sess.last_run.kv_hit_tokens),
             "kv_evictions": int(sess.last_run.kv_evictions),
+            # prefetch + bugfix telemetry: staging groups issued, staged
+            # pages the gather found resident, hits the hit-or-recompute
+            # rule declined, and all-pinned capacity breaches (all zero
+            # with the respective subsystems off)
+            "kv_prefetches": int(sess.last_run.kv_prefetches),
+            "kv_prefetch_hits": int(sess.last_run.kv_prefetch_hits),
+            "kv_hit_declined": int(sess.last_run.kv_hit_declined),
+            "kv_soft_overflows": int(sess.last_run.kv_soft_overflows),
             # chosen shapes per regime: the observable output of the
             # batching policy (widths/groups the scheduler actually ran)
             "decode_widths": dict(batching.get("decode_width", {})),
@@ -179,12 +192,19 @@ SERVING_REGIMES = {
     "mixed": dict(k=9, wfs=(1, 2, 3), inter_arrival=0.5),
     "migration": dict(k=8, wfs=(3,), inter_arrival=1.0,
                       ctx_scale=4, answer_scale=6, variants=KV_VARIANTS),
-    # prefix-reuse regime: k W1 queries over ONE shared 4-document corpus
-    # (identical retrieved chunk lists), so every chat prefill after the
-    # first can hit resident context pages — the cross-query prefix-cache
-    # case the paged-KV subsystem exists for
-    "prefix": dict(k=8, wfs=(1,), inter_arrival=0.5,
-                   shared_corpus=True, variants=PREFIX_VARIANTS),
+    # prefix-reuse regime: a hot/cold serving mix — even-slot queries
+    # cycle ``hot_corpora`` shared corpora (identical retrieved chunk
+    # lists, so their chat prefills re-hit resident context pages),
+    # odd-slot queries each bring a one-shot cold corpus whose pages are
+    # dead weight after release.  Scaled contexts push the combined
+    # working set past the PU arenas and the DRAM pool, so hot prefix
+    # chains get demoted between reuses and the repeat prefill finds its
+    # hits in a spill tier — the cross-query prefix-cache case the paged
+    # subsystem exists for, and the spill-resident-hit case predictive
+    # prefetch exists for
+    "prefix": dict(k=16, wfs=(1,), inter_arrival=30.0,
+                   shared_corpus=True, hot_corpora=2, ctx_scale=8,
+                   variants=PREFIX_VARIANTS),
 }
 
 # the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
@@ -214,7 +234,24 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
     for regime, cfg in todo:
         if cfg.get("shared_corpus"):
             from repro.rag import shared_corpus_traces
-            traces = shared_corpus_traces(dataset, cfg["k"], seed=11)
+            hot = cfg.get("hot_corpora", 0)
+            if hot:
+                # hot/cold mix: even slots cycle the hot shared corpora
+                # (prefix reuse), odd slots are one-shot cold corpora
+                # (eviction pressure + dead-weight victims)
+                hots = [shared_corpus_traces(dataset, cfg["k"],
+                                             seed=11 + s)
+                        for s in range(hot)]
+                traces, hi = [], 0
+                for i in range(cfg["k"]):
+                    if i % 2 == 0:
+                        traces.append(hots[hi % hot][hi // hot])
+                        hi += 1
+                    else:
+                        traces.append(shared_corpus_traces(
+                            dataset, 1, seed=101 + i)[0])
+            else:
+                traces = shared_corpus_traces(dataset, cfg["k"], seed=11)
         else:
             traces = sample_traces(dataset, cfg["k"], seed=11)
         if cfg.get("ctx_scale") or cfg.get("answer_scale"):
@@ -235,7 +272,7 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
             f"inter_arrival={cfg['inter_arrival']}s)")
         csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
             "decode_rounds,kv_migrations,kv_gb,page_hits,hit_tok,"
-            "widths,groups")
+            "prefetches,prefetch_hits,widths,groups")
         for label, kw in cfg.get("variants", variants):
             row = cells[label] = _variant_metrics(
                 world, means, traces, wfs, cfg["inter_arrival"], kw)
@@ -243,7 +280,8 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
                 f"{row['decode_rounds']},{row['kv_migrations']},"
                 f"{row['kv_bytes'] / 1e9:.2f},{row['kv_page_hits']},"
-                f"{row['kv_hit_tokens']},{_hist(row['decode_widths'])},"
+                f"{row['kv_hit_tokens']},{row['kv_prefetches']},"
+                f"{row['kv_prefetch_hits']},{_hist(row['decode_widths'])},"
                 f"{_hist(row['decode_groups'])}")
         kvm, kvc = cells.get("hero+kv"), cells.get("hero+kv-const")
         if kvm and kvc:
@@ -259,6 +297,14 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 f"{pages['p99']:.2f}s ({pages['kv_page_hits']} page hits/"
                 f"{pages['kv_hit_tokens']} prefill tokens skipped, "
                 f"{pages['kv_evictions']} evictions)")
+        pre_ = cells.get("hero+prefetch")
+        if pre_ and pages:
+            csv(f"# {world}/{regime}: predictive prefetch p99 "
+                f"{pages['p99']:.4f}s -> {pre_['p99']:.4f}s "
+                f"({pre_['kv_prefetches']} stagings/"
+                f"{pre_['kv_prefetch_hits']} pages found resident at "
+                "gather; overlap credit hides the spill fetch, so the "
+                "delta is bounded by the tier traffic the run paid)")
         if "hero+adaptive" not in cells or "hero" not in cells:
             continue
         gain = (cells["hero+adaptive"]["throughput"]
@@ -313,7 +359,7 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
         fixed = row["hero+decode_batch"]["p99"]
         for label in ("hero", "hero+decode_batch", "hero+adaptive",
                       "hero+adaptive-q", "hero+kv-const", "hero+kv",
-                      "hero+pages"):
+                      "hero+pages", "hero+prefetch"):
             if label not in row:   # per-regime variant sets differ
                 continue
             p99 = row[label]["p99"]

@@ -58,6 +58,17 @@ class BackendRun:
     kv_hit_tokens: int = 0
     kv_evictions: int = 0
     kv_evicted_bytes: float = 0.0
+    # prefix hits declined by the hit-or-recompute rule (fetching the
+    # demoted page would cost more than re-prefilling it) and all-pinned
+    # capacity breaches (kv_soft_overflow events)
+    kv_hit_declined: int = 0
+    kv_soft_overflows: int = 0
+    # predictive-prefetch totals (zero unless ``kv_prefetch`` is on):
+    # staging groups issued, bytes staged, and staged pages the next
+    # dispatch found already resident
+    kv_prefetches: int = 0
+    kv_prefetch_bytes: float = 0.0
+    kv_prefetch_hits: int = 0
 
 
 class Backend(Protocol):
@@ -116,7 +127,17 @@ class SimBackend:
                           kv_evictions=getattr(scheduler.kv,
                                                "evictions", 0),
                           kv_evicted_bytes=getattr(scheduler.kv,
-                                                   "evicted_bytes", 0.0))
+                                                   "evicted_bytes", 0.0),
+                          kv_hit_declined=getattr(scheduler.kv,
+                                                  "hit_declined", 0),
+                          kv_soft_overflows=getattr(scheduler.kv,
+                                                    "soft_overflows", 0),
+                          kv_prefetches=getattr(scheduler.kv,
+                                                "prefetches", 0),
+                          kv_prefetch_bytes=getattr(scheduler.kv,
+                                                    "prefetch_bytes", 0.0),
+                          kv_prefetch_hits=getattr(scheduler.kv,
+                                                   "prefetch_hits", 0))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -199,4 +220,9 @@ class LiveBackend:
             kv_page_hits=getattr(scheduler.kv, "hits", 0),
             kv_hit_tokens=getattr(scheduler.kv, "hit_tokens", 0),
             kv_evictions=getattr(scheduler.kv, "evictions", 0),
-            kv_evicted_bytes=getattr(scheduler.kv, "evicted_bytes", 0.0))
+            kv_evicted_bytes=getattr(scheduler.kv, "evicted_bytes", 0.0),
+            kv_hit_declined=getattr(scheduler.kv, "hit_declined", 0),
+            kv_soft_overflows=getattr(scheduler.kv, "soft_overflows", 0),
+            kv_prefetches=getattr(scheduler.kv, "prefetches", 0),
+            kv_prefetch_bytes=getattr(scheduler.kv, "prefetch_bytes", 0.0),
+            kv_prefetch_hits=getattr(scheduler.kv, "prefetch_hits", 0))

@@ -40,6 +40,16 @@ class QueryResult:
     # tokens those hits skipped (zero unless ``kv_pages`` is on)
     kv_page_hits: int = 0
     kv_hit_tokens: int = 0
+    # prefix hits the hit-or-recompute rule declined on this query's
+    # prefills (fetching the demoted pages would have cost more than
+    # re-prefilling them)
+    kv_hit_declined: int = 0
+    # predictive-prefetch staging attributed to this query's nodes (zero
+    # unless ``kv_prefetch`` is on): groups issued, bytes staged, and
+    # staged pages a later dispatch found already resident
+    kv_prefetches: int = 0
+    kv_prefetch_bytes: float = 0.0
+    kv_prefetch_hits: int = 0
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -60,7 +70,8 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
         coalesced = rounds = kv_migs = page_hits = hit_tokens = 0
-        kv_bytes = 0.0
+        hit_declined = prefetches = prefetch_hits = 0
+        kv_bytes = prefetch_bytes = 0.0
         for n in nodes:
             if n.status != "done" or n.start < 0:
                 continue
@@ -68,6 +79,10 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             kv_bytes += n.payload.get("kv_bytes_moved", 0.0)
             page_hits += n.payload.get("kv_page_hits", 0)
             hit_tokens += n.payload.get("kv_hit_tokens", 0)
+            hit_declined += n.payload.get("kv_hit_declined", 0)
+            prefetches += n.payload.get("kv_prefetches", 0)
+            prefetch_bytes += n.payload.get("kv_prefetch_bytes", 0.0)
+            prefetch_hits += n.payload.get("kv_prefetch_hits", 0)
             dur = n.finish - n.start
             # stage latency is wall time in the stage; PU busy is charged
             # by workload share when the node rode a fused (coalesced)
@@ -111,7 +126,10 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             redispatches=redispatches, n_nodes=len(nodes),
             coalesced_nodes=coalesced, decode_rounds=rounds,
             kv_migrations=kv_migs, kv_bytes_moved=kv_bytes,
-            kv_page_hits=page_hits, kv_hit_tokens=hit_tokens)
+            kv_page_hits=page_hits, kv_hit_tokens=hit_tokens,
+            kv_hit_declined=hit_declined, kv_prefetches=prefetches,
+            kv_prefetch_bytes=prefetch_bytes,
+            kv_prefetch_hits=prefetch_hits)
         h.result = res
         out.append(res)
     return out

@@ -41,7 +41,18 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
   PU-local → DRAM → disk store with LRU-with-pin eviction, page-granular
   migration, and a content-hash prefix cache that lets prefills whose
   retrieved-context prefix is already resident skip that work; results
-  then also report ``kv_page_hits`` / ``kv_hit_tokens``.
+  then also report ``kv_page_hits`` / ``kv_hit_tokens``; prefix hits
+  obey the hit-or-recompute rule (a demoted page is only reused when
+  fetching it beats re-prefilling — declines show up as
+  ``kv_hit_declined``).
+- ``kv_prefetch=True`` (with ``kv_pages``) adds predictive prefetch:
+  after every committed dispatch pass, the scheduler pre-stages the
+  spill-resident pages of admitted prefill hits and ready-but-waiting
+  decode streams onto their anchor PU, crediting the fitted fetch time
+  against the committed compute window (fetch/compute overlap) instead
+  of paying it on the dispatch critical path; eviction becomes
+  hit-frequency-weighted, and results report ``kv_prefetches`` /
+  ``kv_prefetch_bytes`` / ``kv_prefetch_hits``.
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
@@ -107,6 +118,7 @@ class HeroSession:
                  batch_policy: Optional[str] = None,
                  kv_residency: Optional[bool] = None,
                  kv_pages: Optional[bool] = None,
+                 kv_prefetch: Optional[bool] = None,
                  fine_grained: Optional[bool] = None,
                  means: Optional[dict] = None,
                  pus: Optional[List[str]] = None,
@@ -128,6 +140,9 @@ class HeroSession:
         if kv_pages is not None:       # sugar for the paged-KV subsystem
             cfg_overrides = {**(cfg_overrides or {}),
                              "kv_pages": kv_pages}
+        if kv_prefetch is not None:    # sugar for predictive prefetch
+            cfg_overrides = {**(cfg_overrides or {}),
+                             "kv_prefetch": kv_prefetch}
         self.cfg_overrides = cfg_overrides
         self.fine_grained = fine_grained
         self.means = means

@@ -34,6 +34,7 @@ exactly once.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
@@ -95,6 +96,13 @@ class StageSpec:
     # Stamped as payload["prefix_segments"] when the trace carries
     # chunk_ids; the paged-KV prefix cache keys page hashes off it
     shared_ctx: Optional[Workload] = None
+    # explicit decode stage whose profiled KV shape denominates this
+    # stage's cache pages.  The paged-KV tracker otherwise guesses by the
+    # ``*_prefill`` → ``*_decode`` naming convention — custom specs whose
+    # stage names do not follow it MUST set this, or their prefix-cached
+    # prefills are detected at build time and warned-and-skipped instead
+    # of silently paged under the wrong profiled shape
+    kv_stage: Optional[str] = None
 
     @property
     def tid(self) -> str:
@@ -219,12 +227,17 @@ class WorkflowSpec:
             return max(int(fn(v)), 1)
 
         def add(d, nid, stage, kind, workload, deps, template,
-                coalescable=True, shared_ctx=0):
+                coalescable=True, shared_ctx=0, kv_stage=None):
             n = d.add(Node(id=nid, stage=stage, kind=kind,
                            workload=max(int(workload), 1),
                            deps=set(deps), template=template))
             if not coalescable:
                 n.payload["no_coalesce"] = True
+            if kv_stage is not None:
+                # explicit KV-shape override (StageSpec.kv_stage): the
+                # paged tracker reads this instead of guessing by the
+                # *_prefill/*_decode naming convention
+                n.payload["kv_decode_stage"] = kv_stage
             if kind == "stream_decode":
                 # base KV context the stream inherits from its prefill
                 # deps — what KV-residency tracking charges before any
@@ -239,6 +252,20 @@ class WorkflowSpec:
                         # cache they fill (paged-KV page adoption)
                         d.nodes[dep].payload["kv_stream"] = n.id
             elif kind == "stream_prefill" and shared_ctx > 0:
+                if kv_stage is None and not stage.endswith("_prefill"):
+                    # the convention trap, caught at build time: without
+                    # an override the tracker would page this prefill's
+                    # cache under a guessed (wrong) decode shape — warn
+                    # and fall back to no prefix caching instead
+                    warnings.warn(
+                        f"{self.name}: stage {stage!r} (node {nid!r}) "
+                        "declares shared_ctx but does not follow the "
+                        "*_prefill naming convention and sets no "
+                        "StageSpec.kv_stage override — prefix caching "
+                        "disabled for it to avoid paging its KV under "
+                        "the wrong profiled shape",
+                        RuntimeWarning, stacklevel=2)
+                    return n
                 chunks = getattr(v, "chunk_ids", ())
                 if chunks:
                     # prefix-cache content identity, in prompt order: the
@@ -305,7 +332,8 @@ class WorkflowSpec:
             add(dag, N(s.id), s.stage, s.kind, W(s.workload), deps=deps,
                 template=s.tid, coalescable=s.coalescable,
                 shared_ctx=(int(s.shared_ctx(v))
-                            if s.shared_ctx is not None else 0))
+                            if s.shared_ctx is not None else 0),
+                kv_stage=s.kv_stage)
             if col is not None and s.id == col.base_dep:
                 # base-branch refine; its chat piece is the chain head (it
                 # carries the query tokens), not an add_chat_piece link

@@ -33,16 +33,32 @@ cache organize KV state:
   pages are re-referenced for the new stream at prefill completion
   (``on_prefill_done``).
 
-Both backends drain the same event/transfer queues (``kv_page_hit`` /
-``kv_evict`` events; spill transfers priced by the simulator through
+On top of paging sits a **predictive prefetch** layer (PerCache's
+hierarchical staging, RAGDoll's fetch/compute overlap): the scheduler's
+lookahead hook (``HeroScheduler._prefetch_pass``) calls :meth:`prefetch`
+when it commits a round, pre-staging spill-resident pages up the tiers
+*during* the committed compute window instead of fetching them on the
+dispatch critical path.  Each prefetch carries the overlap credit it was
+issued with, so the simulator charges only the residual
+(``max(0, fetch_s - credit)`` — the ``min(issue + fetch_s,
+prev_round_end)`` completion model).  With prefetch enabled, eviction is
+hit-frequency-weighted instead of plain LRU: cold private pages demote
+before shared prefix pages that keep earning hits.
+
+Both backends drain the same event/transfer/prefetch queues
+(``kv_page_hit`` / ``kv_evict`` / ``kv_prefetch`` / ``kv_soft_overflow``
+events; spill transfers priced by the simulator through
 ``GroundTruthPerf.tier_transfer_cost``), so accounting is
 backend-independent.  The subsystem is gated by
 ``SchedulerConfig.kv_pages`` — off, the scheduler keeps the monolithic
-tracker (or none), bit-identical to the PR 2/3/5 goldens.
+tracker (or none), bit-identical to the PR 2/3/5 goldens — and the
+prefetch layer by ``SchedulerConfig.kv_prefetch`` (off = bit-identical
+to the PR 6 paging behaviour).
 """
 from __future__ import annotations
 
 import hashlib
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -60,6 +76,20 @@ def decode_stage_of(stage: str) -> str:
     if stage.endswith("_prefill"):
         return stage[: -len("_prefill")] + "_decode"
     return stage
+
+
+def decode_stage_for(n: Node) -> str:
+    """Resolve the decode stage denominating ``n``'s KV pages: an explicit
+    ``StageSpec.kv_stage`` override (stamped as
+    ``payload["kv_decode_stage"]``) wins; otherwise the
+    ``*_prefill``/``*_decode`` naming convention.  Custom specs whose
+    stage names do not follow the convention MUST override — paging a
+    prefill under a guessed decode shape mischarges every byte it
+    touches (the trap the override closes)."""
+    override = n.payload.get("kv_decode_stage")
+    if override:
+        return str(override)
+    return decode_stage_of(n.stage)
 
 
 def chain_hash(prev: Optional[str], content: str) -> str:
@@ -113,6 +143,7 @@ class KVPage:
     hash: Optional[str] = None  # content id (prefix-cacheable); None=private
     refs: int = 0              # live streams holding this page (pin)
     last_use: int = 0          # LRU clock
+    hits: int = 0              # prefix-cache reuses (frequency weight)
 
 
 @dataclass
@@ -139,9 +170,13 @@ class PagedKVCache:
 
     paged = True
 
-    def __init__(self, perf: LinearPerfModel, page_tokens: int = 64):
+    def __init__(self, perf: LinearPerfModel, page_tokens: int = 64,
+                 prefetch: bool = False):
         self.perf = perf
         self.page_tokens = max(int(page_tokens), 1)
+        # predictive prefetch + hit-frequency-weighted eviction; off = the
+        # PR 6 paging behaviour, bit-identical (plain LRU, no staging)
+        self.prefetch_on = bool(prefetch)
         self._streams: Dict[str, PagedStream] = {}
         self._pages: Dict[int, KVPage] = {}
         self._tier_pages: Dict[str, Set[int]] = {}
@@ -149,21 +184,36 @@ class PagedKVCache:
         self._index: Dict[str, int] = {}        # content hash -> pid
         self._next_pid = 0
         self._clock = 0
+        # pages staged ahead of a dispatch and not yet consumed: a gather
+        # finding one resident on a PU arena is a prefetch hit
+        self._prefetched: Set[int] = set()
+        # (prefill stage, decode stage) pairs already warned about an
+        # unprofiled KV shape — warn once, then silently fall back
+        self._warned_stages: Set[Tuple[str, str]] = set()
         # run totals (BackendRun accounting)
         self.migrations = 0
         self.bytes_moved = 0.0
         self.hits = 0
         self.hit_tokens = 0
+        self.hit_declined = 0
         self.evictions = 0
         self.evicted_bytes = 0.0
         self.fetches = 0
         self.fetched_bytes = 0.0
+        self.prefetches = 0
+        self.prefetch_bytes = 0.0
+        self.prefetch_hits = 0
+        self.soft_overflows = 0
         # drainable queues, consumed by whichever backend dispatches next:
-        # (event_name, node) pairs and (stage, src_tier, dst_tier, tokens)
+        # (event_name, node) pairs, (stage, src_tier, dst_tier, tokens)
         # spill transfers (the simulator charges them ground-truth seconds;
-        # the live runtime records them)
+        # the live runtime records them), and (stage, src, dst, tokens,
+        # credit_s) prefetches — the credit is the compute-overlap window
+        # the scheduler issued the staging under, so the simulator charges
+        # only the residual beyond it
         self._events: List[Tuple[str, Node]] = []
         self._transfers: List[Tuple[str, str, str, int]] = []
+        self._prefetch_q: List[Tuple[str, str, str, int, float]] = []
 
     # -- page primitives -----------------------------------------------------
     def _touch(self, pg: KVPage) -> None:
@@ -203,6 +253,7 @@ class PagedKVCache:
                                     - self._page_bytes(pg))
         if pg.hash is not None and self._index.get(pg.hash) == pg.pid:
             del self._index[pg.hash]
+        self._prefetched.discard(pg.pid)
         del self._pages[pg.pid]
 
     def _grow_page(self, pg: KVPage, tokens: int) -> None:
@@ -220,10 +271,14 @@ class PagedKVCache:
         return DISK if tier == DRAM else DRAM
 
     def _make_room(self, tier: str, need: float, node: Node) -> None:
-        """Demote LRU unpinned pages out of ``tier`` until ``need`` bytes
-        fit.  Pinned pages (``refs > 0``) are never moved — when only
+        """Demote unpinned pages out of ``tier`` until ``need`` bytes fit
+        (plain LRU; hit-frequency-weighted under ``prefetch`` — cold
+        private pages go before shared prefix pages that keep earning
+        hits).  Pinned pages (``refs > 0``) are never moved — when only
         pinned pages remain the arena soft-overflows instead (live
-        streams beat the capacity model)."""
+        streams beat the capacity model), and the breach is counted and
+        emitted as a ``kv_soft_overflow`` event rather than passing
+        silently; ``release`` demotes the excess once the pins drop."""
         cap = self._capacity(tier)
         if cap == float("inf"):
             return
@@ -233,8 +288,13 @@ class PagedKVCache:
                        for pid in self._tier_pages.get(tier, ())
                        if self._pages[pid].refs <= 0]
             if not victims:
-                return                        # all pinned: soft overflow
-            pg = min(victims, key=lambda p: (p.last_use, p.pid))
+                self.soft_overflows += 1      # all pinned: soft overflow
+                self._events.append(("kv_soft_overflow", node))
+                return
+            if self.prefetch_on:
+                pg = min(victims, key=lambda p: (p.hits, p.last_use, p.pid))
+            else:
+                pg = min(victims, key=lambda p: (p.last_use, p.pid))
             if dst is None:
                 self._free(pg)                # nowhere lower: drop
             else:
@@ -251,7 +311,7 @@ class PagedKVCache:
         st = self._streams.get(key)
         if st is None:
             st = self._streams[key] = PagedStream(
-                stage=decode_stage_of(m.stage), pu=None, ctx_tokens=0)
+                stage=decode_stage_for(m), pu=None, ctx_tokens=0)
         # reconcile against the node's own accounting: context the stream
         # should hold (prefill ctx + decoded so far) beyond what pages /
         # pending already cover becomes pending growth — this covers
@@ -404,6 +464,15 @@ class PagedKVCache:
             gather: Dict[str, Tuple[int, List[int]]] = {}
             for pid in st.pages:
                 pg = self._pages[pid]
+                if pid in self._prefetched:
+                    # staged ahead of this dispatch: resident here = a
+                    # prefetch hit; elsewhere = thrash, and the page
+                    # falls through to the on-path gather below
+                    self._prefetched.discard(pid)
+                    if pg.tier == pu:
+                        self.prefetch_hits += 1
+                        m.payload["kv_prefetch_hits"] = (
+                            m.payload.get("kv_prefetch_hits", 0) + 1)
                 if pg.tier != pu:
                     toks, pids = gather.get(pg.tier, (0, []))
                     gather[pg.tier] = (toks + pg.tokens, pids + [pid])
@@ -453,10 +522,14 @@ class PagedKVCache:
     def release(self, m: Node) -> None:
         """Terminal release of ``m``'s stream: private pages free, hashed
         (prefix-cache) pages stay resident at ``refs == 0`` — evictable,
-        reusable by the next query with the same prefix."""
+        reusable by the next query with the same prefix.  Tiers that an
+        earlier all-pinned soft overflow left above capacity demote
+        their (now unpinned) excess here — the conservation guarantee
+        that every tier returns under capacity once streams release."""
         st = self._streams.pop(stream_key(m), None)
         if st is None:
             return
+        touched: Set[str] = set()
         for pid in st.pages:
             pg = self._pages.get(pid)
             if pg is None:
@@ -464,29 +537,58 @@ class PagedKVCache:
             pg.refs = max(pg.refs - 1, 0)
             if pg.refs == 0 and pg.hash is None:
                 self._free(pg)
+            elif pg.refs == 0:
+                touched.add(pg.tier)
+        for tier in sorted(touched):
+            if (self._tier_used.get(tier, 0.0) > self._capacity(tier)
+                    and any(self._pages[pid].refs <= 0
+                            for pid in self._tier_pages.get(tier, ()))):
+                self._make_room(tier, 0.0, m)
 
     # -- prefix cache --------------------------------------------------------
     def apply_prefix_hits(self, n: Node) -> None:
         """Scheduler first-seen hook for a ``stream_prefill`` node: trim
         the node's workload by the longest resident page-aligned prefix
-        (hits keep ≥ 1 token so the node still anchors its successors).
-        Hit pages are referenced immediately (pinned) so they cannot
-        evict before ``on_prefill_done`` adopts them for the stream."""
+        *worth taking* — the hit-or-recompute rule: a resident run only
+        trims workload up to the length where the modeled spill-fetch
+        cost still undercuts the prefill compute it skips (a
+        disk-resident "hit" can lose; the losing tail is declined and
+        counted in ``kv_hit_declined``).  Hits keep ≥ 1 token so the
+        node still anchors its successors, and hit pages are referenced
+        immediately (pinned) so they cannot evict before
+        ``on_prefill_done`` adopts them for the stream."""
         segs = n.payload.get("prefix_segments")
         if not segs or n.payload.get("kv_prefix_done"):
             return
         n.payload["kv_prefix_done"] = True
-        stage = decode_stage_of(n.stage)
+        stage = decode_stage_for(n)
         if stage not in self.perf.kv_bytes:
+            key = (n.stage, stage)
+            if key not in self._warned_stages:
+                self._warned_stages.add(key)
+                warnings.warn(
+                    f"stage {n.stage!r} resolves to decode stage "
+                    f"{stage!r}, which has no profiled KV shape — set "
+                    "StageSpec.kv_stage to page its cache under the "
+                    "right profile (prefix reuse disabled for it)",
+                    RuntimeWarning, stacklevel=2)
             return
         hits: List[int] = []
-        toks = 0
-        for h, tok in page_keys(segs, self.page_tokens):
+        for h, _tok in page_keys(segs, self.page_tokens):
             pid = self._index.get(h)
             if pid is None:
                 break
             hits.append(pid)
-            toks += tok
+        if not hits:
+            return
+        keep, toks = self._hit_or_recompute(n, stage, hits)
+        if keep < len(hits):
+            declined = len(hits) - keep
+            self.hit_declined += declined
+            n.payload["kv_hit_declined"] = (
+                n.payload.get("kv_hit_declined", 0) + declined)
+            self._events.append(("kv_hit_declined", n))
+            hits = hits[:keep]
         if not hits:
             return
         trim = min(toks, max(int(n.workload) - 1, 0))
@@ -496,6 +598,7 @@ class PagedKVCache:
         for pid in hits:
             pg = self._pages[pid]
             pg.refs += 1
+            pg.hits += 1
             self._touch(pg)
         n.payload["kv_page_hits"] = len(hits)
         n.payload["kv_hit_tokens"] = trim
@@ -503,6 +606,53 @@ class PagedKVCache:
         self.hits += len(hits)
         self.hit_tokens += trim
         self._events.append(("kv_page_hit", n))
+
+    def _min_fetch(self, stage: str, src: str, tokens: int
+                   ) -> Optional[float]:
+        """Cheapest fitted fetch line out of spill tier ``src`` for
+        ``tokens`` of ``stage``'s pages (``None`` when no line fits —
+        callers fall back to the legacy always-hit behaviour)."""
+        best: Optional[float] = None
+        for (s, a, b) in sorted(self.perf.fetch_coef):
+            if s != stage or a != src:
+                continue
+            c = self.perf.fetch_cost(stage, src, b, tokens)
+            if c is not None and (best is None or c < best):
+                best = c
+        return best
+
+    def _hit_or_recompute(self, n: Node, stage: str,
+                          hits: Sequence[int]) -> Tuple[int, int]:
+        """Hit-or-recompute: the longest resident prefix is only worth
+        taking up to the page count maximizing (modeled prefill compute
+        skipped) − (modeled spill-fetch cost paid).  PU-resident pages
+        are free to hit; a run reaching into disk can cost more to
+        fetch than to re-prefill.  Returns ``(pages_kept,
+        tokens_kept)``; any unprofiled piece (no prefill grid for the
+        stage, no fetch line for a spill tier) keeps the legacy
+        always-hit behaviour so handcrafted profiles stay exact."""
+        total_tok = sum(self._pages[pid].tokens for pid in hits)
+        cum_tok = 0
+        spill: Dict[str, int] = {}
+        best_k, best_tok, best_net = 0, 0, 0.0
+        for k, pid in enumerate(hits, start=1):
+            pg = self._pages[pid]
+            cum_tok += pg.tokens
+            if pg.tier in (DRAM, DISK):
+                spill[pg.tier] = spill.get(pg.tier, 0) + pg.tokens
+            saved = self.perf.prefill_cost(n.stage, cum_tok)
+            if saved is None:
+                return len(hits), total_tok
+            fetch = 0.0
+            for src in sorted(spill):
+                c = self._min_fetch(stage, src, spill[src])
+                if c is None:
+                    return len(hits), total_tok
+                fetch += c
+            net = saved - fetch
+            if net > best_net:
+                best_k, best_tok, best_net = k, cum_tok, net
+        return best_k, best_tok
 
     def on_prefill_done(self, n: Node, pu: Optional[str]) -> None:
         """DAG completion hook for a ``stream_prefill`` node: materialize
@@ -513,7 +663,7 @@ class PagedKVCache:
             return
         n.payload["kv_paged_done"] = True
         segs = n.payload.get("prefix_segments")
-        stage = decode_stage_of(n.stage)
+        stage = decode_stage_for(n)
         if not segs or stage not in self.perf.kv_bytes or pu is None:
             return
         pages: List[int] = []
@@ -523,6 +673,7 @@ class PagedKVCache:
             if pid is not None:
                 pg = self._pages[pid]
                 pg.refs += 1
+                pg.hits += 1
                 self._touch(pg)
             else:
                 pg = self._alloc(stage, tok, pu, h, n)
@@ -548,6 +699,90 @@ class PagedKVCache:
         if st.pu is None:
             st.pu = pu
 
+    # -- predictive prefetch ---------------------------------------------------
+    def _headroom(self, tier: str) -> float:
+        """Bytes ``tier`` can absorb without touching a pinned page or a
+        page staged this pass: free capacity plus evictable (unpinned,
+        un-prefetched) page bytes.  Speculative staging must fit inside
+        this — prefetch never forces a soft overflow and never thrashes
+        its own stagings."""
+        cap = self._capacity(tier)
+        if cap == float("inf"):
+            return float("inf")
+        free = cap - self._tier_used.get(tier, 0.0)
+        evictable = sum(self._page_bytes(self._pages[pid])
+                        for pid in self._tier_pages.get(tier, ())
+                        if self._pages[pid].refs <= 0
+                        and pid not in self._prefetched)
+        return free + evictable
+
+    def prefetch(self, node: Node, dst_pu: str, budget_s: float,
+                 pids: Optional[Sequence[int]] = None) -> float:
+        """Pre-stage ``node``'s spill-resident (dram/disk) pages onto
+        ``dst_pu`` under a compute-overlap window of ``budget_s``
+        modeled seconds; returns the modeled transfer seconds consumed
+        (the scheduler debits its window — the transfer queue is
+        serial, so groups split one budget sequentially).  ``pids``
+        restricts the page set (e.g. a prefill's ``kv_hit_pages``);
+        default is the node's tracked stream.  PU-resident pages never
+        move (that is the dispatch gather's migration to price), and a
+        group is clipped — not forced — to the destination's evictable
+        headroom (staging what fits, leaving the tail for the on-path
+        gather) and skipped when it has no fitted fetch line.
+        Each staged group queues ``(stage, src, dst, tokens, credit)``
+        for the backends: the simulator charges only the ground-truth
+        residual beyond the credit; the live runtime records it."""
+        if not self.prefetch_on or budget_s <= 0.0:
+            return 0.0
+        if pids is None:
+            st = self.tracked(node)
+            pids = tuple(st.pages) if st is not None else ()
+        groups: Dict[Tuple[str, str], Tuple[int, List[int]]] = {}
+        for pid in pids:
+            pg = self._pages.get(pid)
+            if (pg is None or pg.tier not in (DRAM, DISK)
+                    or pid in self._prefetched):
+                continue
+            toks, lst = groups.get((pg.tier, pg.stage), (0, []))
+            groups[(pg.tier, pg.stage)] = (toks + pg.tokens, lst + [pid])
+        spent = 0.0
+        for (tier, stage) in sorted(groups):
+            if budget_s - spent <= 0.0:
+                break
+            _toks, lst = groups[(tier, stage)]
+            head = self._headroom(dst_pu)
+            take: List[int] = []
+            take_toks, by = 0, 0.0
+            for pid in lst:
+                pby = self._page_bytes(self._pages[pid])
+                if by + pby > head:
+                    break
+                take.append(pid)
+                take_toks += self._pages[pid].tokens
+                by += pby
+            if not take:
+                continue
+            cost = self.perf.fetch_cost(stage, tier, dst_pu, take_toks)
+            if cost is None:
+                continue
+            credit = min(cost, budget_s - spent)
+            self._make_room(dst_pu, by, node)
+            for pid in take:
+                self._place(self._pages[pid], dst_pu)
+                self._touch(self._pages[pid])
+                self._prefetched.add(pid)
+            self.prefetches += 1
+            self.prefetch_bytes += by
+            node.payload["kv_prefetches"] = (
+                node.payload.get("kv_prefetches", 0) + 1)
+            node.payload["kv_prefetch_bytes"] = (
+                node.payload.get("kv_prefetch_bytes", 0.0) + by)
+            self._events.append(("kv_prefetch", node))
+            self._prefetch_q.append(
+                (stage, tier, dst_pu, take_toks, credit))
+            spent += credit
+        return spent
+
     # -- drain queues (backend accounting) -----------------------------------
     def drain_events(self) -> List[Tuple[str, Node]]:
         ev, self._events = self._events, []
@@ -556,3 +791,7 @@ class PagedKVCache:
     def drain_transfers(self) -> List[Tuple[str, str, str, int]]:
         t, self._transfers = self._transfers, []
         return t
+
+    def drain_prefetches(self) -> List[Tuple[str, str, str, int, float]]:
+        q, self._prefetch_q = self._prefetch_q, []
+        return q

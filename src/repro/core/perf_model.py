@@ -552,6 +552,23 @@ class LinearPerfModel:
         cap = self.kv_tiers.get(tier, 0.0)
         return cap or float("inf")
 
+    def prefill_cost(self, stage: str, tokens: int) -> Optional[float]:
+        """Modeled seconds to (re-)prefill ``tokens`` of ``stage`` on its
+        best profiled PU — the alternative a prefix-cache hit on a demoted
+        page must beat (the hit-or-recompute rule): fetching KV up from a
+        cold tier only wins when the transfer is cheaper than simply
+        recomputing the prefix.  First-order estimate (one pass at
+        ``batch=tokens``); ``None`` when the stage was never profiled, in
+        which case callers keep the legacy always-hit behaviour."""
+        best: Optional[float] = None
+        for (s, pu) in sorted(self.coef):
+            if s != stage:
+                continue
+            c = self.p0(s, pu, max(int(tokens), 1))
+            if best is None or c < best:
+                best = c
+        return best
+
     # decode-batching profile grid: widths × token groups (width 1 lives in
     # the ordinary table; the scheduler's group candidates are clipped to
     # the stream's remaining horizon, so off-grid shapes hit the regression)

@@ -32,7 +32,7 @@ from repro.core.batch_policy import ArrivalTracker, make_policy
 from repro.core.dag import (DynamicDAG, Node, WorkflowTemplate,
                             resolve_prefer_pu)
 from repro.core.kv_pages import PagedKVCache
-from repro.core.kv_residency import KVResidency
+from repro.core.kv_residency import KVResidency, _kv_members
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     shape_aware_configs)
 from repro.core.perf_model import LinearPerfModel
@@ -92,6 +92,15 @@ class SchedulerConfig:
     # tokens per KV page (page bytes = this × the stage's profiled GQA
     # cache bytes/token)
     kv_page_tokens: int = 64
+    # predictive prefetch on the paged tiers (PerCache staging / RAGDoll
+    # fetch-compute overlap): after each dispatch pass commits compute,
+    # the scheduler pre-stages the spill-resident pages of admitted
+    # prefill hits and ready-but-deferred decode streams up to their
+    # anchor PU, crediting the fitted fetch time against the committed
+    # compute window instead of paying it on the dispatch critical path;
+    # eviction becomes hit-frequency-weighted.  Requires ``kv_pages``;
+    # off = bit-identical to the PR 6 paging behaviour.
+    kv_prefetch: bool = False
     # migration pricing under kv_residency: "modeled" (footprint ÷ link
     # bandwidth) or "constant" (keep the legacy constant while still
     # tracking and charging real transfers — the mischarging baseline the
@@ -145,7 +154,8 @@ class HeroScheduler:
         # kv_residency the monolithic one; neither = the legacy constant
         if self.cfg.kv_pages:
             self.kv = PagedKVCache(perf,
-                                   page_tokens=self.cfg.kv_page_tokens)
+                                   page_tokens=self.cfg.kv_page_tokens,
+                                   prefetch=self.cfg.kv_prefetch)
         elif self.cfg.kv_residency:
             self.kv = KVResidency(perf)
         else:
@@ -395,6 +405,11 @@ class HeroScheduler:
             busy_until[d.pu] = now + passes * d.predicted_p0 + d.migrate_s
             r_tmp = [n for n in dag.ready() if n not in
                      [x.node for x in decisions]]
+        if (cfgn.kv_prefetch and decisions
+                and getattr(self.kv, "prefetch_on", False)):
+            # lookahead hook: the pass just committed compute — overlap
+            # the next dispatches' page staging with it
+            self._prefetch_pass(dag, decisions, busy_until, now)
         for f in fused_new:
             if f.status == "ready":       # never dispatched: dissolve so
                 dag.unfuse(f)             # members stay schedulable
@@ -406,6 +421,45 @@ class HeroScheduler:
                 # continuous serving
                 self._fifo_seq.pop(f.id, None)
         return decisions
+
+    # -- predictive prefetch ---------------------------------------------------
+    def _prefetch_pass(self, dag: DynamicDAG, decisions: List[Dispatch],
+                       busy_until: Dict[str, float], now: float) -> None:
+        """Lookahead staging after a committed dispatch pass: the compute
+        just dispatched opens an overlap window (the latest non-io
+        ``busy_until`` minus ``now``, in modeled seconds); spend it
+        pre-staging the spill-resident pages the *next* dispatches will
+        gather — (a) admitted prefills whose prefix hit demoted pages
+        stage those hits onto their own PU (the decode that adopts them
+        anchors there), then (b) ready-but-deferred decode streams stage
+        toward their anchor.  The transfer queue is serial, so one
+        budget is debited sequentially across all stagings; dispatched
+        decode rounds are NOT prefetched — their gather runs now, with
+        no compute ahead of it to hide behind."""
+        window = max((t for p, t in busy_until.items() if p != "io"),
+                     default=now)
+        budget = window - now
+        if budget <= 0.0:
+            return
+        dispatched = {d.node.id for d in decisions}
+        for d in decisions:
+            if budget <= 0.0:
+                return
+            pids = d.node.payload.get("kv_hit_pages")
+            if pids and d.pu != "io":
+                budget -= self.kv.prefetch(d.node, d.pu, budget, pids=pids)
+        for n in dag.ready():
+            if n.kind != "stream_decode" or n.id in dispatched:
+                continue
+            for m in _kv_members(n):
+                if budget <= 0.0:
+                    return
+                st = self.kv.tracked(m)
+                if st is None:
+                    continue
+                dst = st.pu or m.payload.get("batch_pu")
+                if dst is not None:
+                    budget -= self.kv.prefetch(m, dst, budget)
 
     # -- cross-query coalescing ----------------------------------------------
     @staticmethod

@@ -237,6 +237,16 @@ class Simulator:
                     if sm is not None:
                         work += self.gt.tier_transfer_cost(sm, src, dst,
                                                            toks)
+                # prefetched stagings were issued under a compute-overlap
+                # credit: only the ground-truth residual beyond it lands
+                # on this dispatch (the min(issue + fetch, round_end)
+                # completion model)
+                for sname, src, dst, toks, credit in \
+                        self.sched.kv.drain_prefetches():
+                    sm = self.gt.stages.get(sname)
+                    if sm is not None:
+                        work += max(0.0, self.gt.tier_transfer_cost(
+                            sm, src, dst, toks) - credit)
                 for ev, n2 in self.sched.kv.drain_events():
                     self._note(timeline, now, ev, n2)
         # fault injection (admission timers are control nodes — a gated

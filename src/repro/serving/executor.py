@@ -277,6 +277,10 @@ class HeroRuntime:
             # reach the run timeline; spill transfers are recorded in the
             # tracker's counters (wall-clock cost is the executors' to pay)
             self.sched.kv.drain_transfers()
+            # prefetched stagings: recorded only (same rule as transfers
+            # — the overlapped wall-clock cost is the executors' to pay),
+            # keeping both backends' prefetch counters identical
+            self.sched.kv.drain_prefetches()
             for ev, n2 in self.sched.kv.drain_events():
                 self._emit(now_t, ev, n2)
         if d.node.status != "running":

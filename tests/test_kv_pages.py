@@ -307,6 +307,11 @@ def test_pages_exclusive_tiers_and_pins_respected():
         # only unpinned prefix-cache pages may remain
         assert all(pg.refs == 0 and pg.hash is not None
                    for pg in kv._pages.values())
+        # soft-overflow conservation: any breach an all-pinned arena
+        # forced mid-run is demoted away at release, so every bounded
+        # tier ends back under its capacity
+        for tier in ("cpu", "gpu", "npu", DRAM):
+            assert kv.resident_bytes(tier) <= kv._capacity(tier) + 1e-9
 
     prop()
 
