@@ -29,6 +29,12 @@ import sys
 # the cells the gate tracks; higher-is-worse metrics only
 GATED_METRICS = ("p99", "total")
 
+# slo-regime floor (mirrors multiquery.SLO_BATCH_FLOOR — this script
+# stays import-free so the gate can run without PYTHONPATH): hero+slo
+# may trade batch completion for interactive p99, but never below this
+# fraction of the class-blind comparator's batch throughput
+SLO_BATCH_FLOOR = 0.75
+
 EXIT_OK, EXIT_REGRESSION, EXIT_MISSING = 0, 2, 3
 
 
@@ -107,6 +113,21 @@ def compare(current: dict, baseline: dict, tol: float):
                     f"{cur_row.get('kv_prefetches', 0)}, prefetch_hits: "
                     f"{base_row.get('kv_prefetch_hits', 0)} -> "
                     f"{cur_row.get('kv_prefetch_hits', 0)}")
+            # SLO-class telemetry (slo regime only): per-class tails and
+            # preemption counts are informational here — the structural
+            # claims below are what enforce the interactive win and the
+            # batch floor
+            if "int_p99" in cur_row:
+                report.append(
+                    f"{regime}/{variant} int_p99: "
+                    f"{base_row.get('int_p99', 0.0):.2f} -> "
+                    f"{cur_row['int_p99']:.2f}, batch_p99: "
+                    f"{base_row.get('batch_p99', 0.0):.2f} -> "
+                    f"{cur_row.get('batch_p99', 0.0):.2f}, batch_qps: "
+                    f"{base_row.get('batch_throughput', 0.0):.3f} -> "
+                    f"{cur_row.get('batch_throughput', 0.0):.3f}, "
+                    f"preemptions: {base_row.get('preemptions', 0)} -> "
+                    f"{cur_row.get('preemptions', 0)}")
     # structural serving claims, checked on whatever regimes this leg ran:
     # continuous decode batching keeps its p99 win over stage coalescing
     # under saturating arrivals, and the adaptive policy keeps its win
@@ -152,6 +173,26 @@ def compare(current: dict, baseline: dict, tol: float):
     # overlapped staging must never leave p99 worse than the pages-only
     # cell (tier traffic is small against compute on this profile, so
     # the bound is exact, not a percentage band)
+    # the class machinery earns its keep on the slo regime: with the
+    # same labelled traffic, SLO admission + boundary preemption must
+    # improve interactive p99 over the class-blind adaptive scheduler,
+    # and the batch class it defers/preempts must keep at least
+    # SLO_BATCH_FLOOR of the comparator's throughput
+    slo = cur_regimes.get("slo", {})
+    s_on, s_off = slo.get("hero+slo"), slo.get("hero+adaptive")
+    if s_on and s_off:
+        if s_on["int_p99"] >= s_off["int_p99"]:
+            regressions.append(
+                f"slo: hero+slo interactive p99 {s_on['int_p99']:.2f}s no "
+                f"longer beats class-blind hero+adaptive "
+                f"{s_off['int_p99']:.2f}s")
+        floor = SLO_BATCH_FLOOR * s_off["batch_throughput"]
+        if s_on["batch_throughput"] < floor:
+            regressions.append(
+                f"slo: hero+slo batch throughput "
+                f"{s_on['batch_throughput']:.3f} qps fell below "
+                f"{SLO_BATCH_FLOOR:.0%} of class-blind "
+                f"{s_off['batch_throughput']:.3f} qps")
     pfc = pre.get("hero+prefetch")
     if pfc and pages:
         if not pfc.get("kv_prefetches"):

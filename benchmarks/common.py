@@ -7,7 +7,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api import HeroSession
+from repro.api import HeroSession, SessionOptions
 from repro.api.session import SOCS, STRATEGIES, make_world  # noqa: F401
 from repro.rag import default_means, sample_traces
 
@@ -22,7 +22,7 @@ def mean_latency(strategy: str, soc_name: str, family: str, wf: int,
     traces = sample_traces(dataset, n, seed=seed)
     sess = HeroSession(world=soc_name, family=family, strategy=strategy,
                        means=default_means(traces),
-                       cfg_overrides=overrides)
+                       options=SessionOptions(cfg_overrides=overrides))
     for tr in traces:
         sess.submit(tr, wf=wf)
     results = sess.run(mode="isolated")

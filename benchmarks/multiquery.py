@@ -13,12 +13,14 @@ them.  Three admission regimes are compared:
                  arrival-gated timer nodes).
 
 ``serving_metrics`` is the serving benchmark behind CI's ``bench-smoke``
-matrix: five regimes (saturated / staggered W1, a ``mixed`` regime
+matrix: six regimes (saturated / staggered W1, a ``mixed`` regime
 interleaving W1–W3 with an optional inter-arrival sweep, the
-KV-``migration`` stress case, and a shared-corpus ``prefix`` regime for
-the paged-KV prefix cache) × the scheduler variants, reporting
-throughput, p50/p99 latency, and the batching policy's chosen decode
-widths / token groups per cell.  Each CI matrix
+KV-``migration`` stress case, a shared-corpus ``prefix`` regime for
+the paged-KV prefix cache, and an ``slo`` regime interleaving
+interactive W1 with batch W3 under load — the class-aware admission +
+preemption case, with per-class p50/p99 columns) × the scheduler
+variants, reporting throughput, p50/p99 latency, and the batching
+policy's chosen decode widths / token groups per cell.  Each CI matrix
 leg runs ONE regime (``--regime``) and writes its own
 ``BENCH_serving.json`` artifact, which ``check_regression.py`` diffs
 against the per-regime baseline under ``benchmarks/baselines/``.
@@ -31,7 +33,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api import HeroSession
+from repro.api import HeroSession, SessionOptions
 from repro.core import tpu_v5e_slices
 from repro.rag import default_means, sample_traces
 
@@ -89,13 +91,15 @@ def run(csv=print, k: int = 3, wf: int = 2, dataset: str = "hotpotqa",
 # online from the profiled grids — the serving default), and the adaptive
 # policy with p99-aware (high-quantile) round scoring
 VARIANTS = (
-    ("hero", dict(coalesce=False)),
-    ("hero+coalesce", dict(coalesce=True,
-                           cfg_overrides={"decode_batch": False})),
-    ("hero+decode_batch", dict(coalesce=True)),
-    ("hero+adaptive", dict(coalesce=True, batch_policy="adaptive")),
-    ("hero+adaptive-q", dict(coalesce=True, batch_policy="adaptive",
-                             cfg_overrides={"round_score": "quantile"})),
+    ("hero", SessionOptions()),
+    ("hero+coalesce", SessionOptions(
+        coalesce=True, cfg_overrides={"decode_batch": False})),
+    ("hero+decode_batch", SessionOptions(coalesce=True)),
+    ("hero+adaptive", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive")),
+    ("hero+adaptive-q", SessionOptions(
+        coalesce=True, batch_policy="adaptive",
+        cfg_overrides={"round_score": "quantile"})),
 )
 
 # the migration-heavy regime's variant set: the adaptive scheduler with
@@ -104,17 +108,20 @@ VARIANTS = (
 # still sees 10 ms per move) vs the modeled footprint ÷ link-bandwidth
 # cost; the two legacy (physics-off) cells anchor the comparison
 KV_VARIANTS = (
-    ("hero+decode_batch", dict(coalesce=True)),
-    ("hero+adaptive", dict(coalesce=True, batch_policy="adaptive")),
-    ("hero+kv-const", dict(coalesce=True, batch_policy="adaptive",
-                           cfg_overrides={"kv_residency": True,
-                                          "migrate_pricing": "constant"})),
-    ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
-                     kv_residency=True)),
-    ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
-                        kv_pages=True)),
-    ("hero+prefetch", dict(coalesce=True, batch_policy="adaptive",
-                           kv_pages=True, kv_prefetch=True)),
+    ("hero+decode_batch", SessionOptions(coalesce=True)),
+    ("hero+adaptive", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive")),
+    ("hero+kv-const", SessionOptions(
+        coalesce=True, batch_policy="adaptive",
+        cfg_overrides={"kv_residency": True,
+                       "migrate_pricing": "constant"})),
+    ("hero+kv", SessionOptions(coalesce=True, batch_policy="adaptive",
+                               kv_residency=True)),
+    ("hero+pages", SessionOptions(coalesce=True, batch_policy="adaptive",
+                                  kv_pages=True)),
+    ("hero+prefetch", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive",
+                                     kv_pages=True, kv_prefetch=True)),
 )
 
 # the prefix regime's variant set: fixed caps, the monolithic KV tracker
@@ -123,14 +130,33 @@ KV_VARIANTS = (
 # regime exercises, and the paged subsystem with predictive tier
 # prefetch (spill-resident hit pages staged under compute overlap)
 PREFIX_VARIANTS = (
-    ("hero+decode_batch", dict(coalesce=True)),
-    ("hero+kv", dict(coalesce=True, batch_policy="adaptive",
-                     kv_residency=True)),
-    ("hero+pages", dict(coalesce=True, batch_policy="adaptive",
-                        kv_pages=True)),
-    ("hero+prefetch", dict(coalesce=True, batch_policy="adaptive",
-                           kv_pages=True, kv_prefetch=True)),
+    ("hero+decode_batch", SessionOptions(coalesce=True)),
+    ("hero+kv", SessionOptions(coalesce=True, batch_policy="adaptive",
+                               kv_residency=True)),
+    ("hero+pages", SessionOptions(coalesce=True, batch_policy="adaptive",
+                                  kv_pages=True)),
+    ("hero+prefetch", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive",
+                                     kv_pages=True, kv_prefetch=True)),
 )
+
+# the SLO regime's variant set: fixed caps (the anchor every regime
+# carries), the adaptive policy with the class machinery OFF (the
+# comparator the structural claims are judged against — same traffic,
+# same SLO labels, labels ignored), and the full class-aware scheduler
+# (SLO admission + boundary-preemptible fused dispatches)
+SLO_VARIANTS = (
+    ("hero+decode_batch", SessionOptions(coalesce=True)),
+    ("hero+adaptive", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive")),
+    ("hero+slo", SessionOptions(coalesce=True, batch_policy="adaptive",
+                                preempt=True, slo_admission=True)),
+)
+
+# batch-class throughput floor for the slo regime's structural claim:
+# hero+slo may trade batch completion for interactive p99, but never
+# below this fraction of the class-blind comparator's batch throughput
+SLO_BATCH_FLOOR = 0.75
 
 
 def _hist(d: dict) -> str:
@@ -138,16 +164,24 @@ def _hist(d: dict) -> str:
     return "|".join(f"{k}:{v}" for k, v in sorted(d.items())) or "-"
 
 
-def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
+def _variant_metrics(world, means, traces, wfs, inter_arrival, opts,
+                     slo_mix: bool = False) -> dict:
     k = len(traces)
     sess = HeroSession(world=world, family="qwen3", strategy="hero",
-                       means=means, **kw)
+                       means=means, options=opts)
     for qi, tr in enumerate(traces):
-        sess.submit(tr, wf=wfs[qi % len(wfs)], arrival_time=qi * inter_arrival)
+        wf = wfs[qi % len(wfs)]
+        # slo regime: W1 queries are interactive traffic, everything
+        # heavier is batch — labels are submitted for EVERY variant so
+        # the class-blind comparators report the same per-class split
+        slo = ("interactive" if wf == 1 else "batch") if slo_mix \
+            else "interactive"
+        sess.submit(tr, wf=wf, slo=slo,
+                    arrival_time=qi * inter_arrival)
     res = sess.run(timeout=14400)
     lats = np.array([r.makespan for r in res])
     batching = sess.last_run.batching
-    return {"total": float(max(r.finish_time for r in res)),
+    row = {"total": float(max(r.finish_time for r in res)),
             "throughput": k / float(max(r.finish_time for r in res)),
             "p50": float(np.percentile(lats, 50)),
             "p99": float(np.percentile(lats, 99)),
@@ -173,7 +207,25 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, kw) -> dict:
             # chosen shapes per regime: the observable output of the
             # batching policy (widths/groups the scheduler actually ran)
             "decode_widths": dict(batching.get("decode_width", {})),
-            "decode_groups": dict(batching.get("decode_group", {}))}
+            "decode_groups": dict(batching.get("decode_group", {})),
+            # members released from preempted fused dispatches (zero
+            # unless the variant turns ``preempt`` on)
+            "preemptions": int(sess.last_run.preemptions)}
+    if slo_mix:
+        def _pct(rs, q):
+            return float(np.percentile([r.makespan for r in rs], q))
+
+        ints = [r for r in res if r.slo_class == "interactive"]
+        bats = [r for r in res if r.slo_class == "batch"]
+        # batch throughput is judged on when the batch CLASS drains, so
+        # deferral/preemption pushing batch work later is priced even
+        # when overall total_s is carried by something else
+        batch_total = max((r.finish_time for r in bats), default=0.0)
+        row.update(
+            int_p50=_pct(ints, 50), int_p99=_pct(ints, 99),
+            batch_p50=_pct(bats, 50), batch_p99=_pct(bats, 99),
+            batch_throughput=len(bats) / max(batch_total, 1e-9))
+    return row
 
 
 # the bench-smoke CI matrix: saturating W1 arrivals (the continuous-
@@ -205,6 +257,15 @@ SERVING_REGIMES = {
     "prefix": dict(k=16, wfs=(1,), inter_arrival=30.0,
                    shared_corpus=True, hot_corpora=2, ctx_scale=8,
                    variants=PREFIX_VARIANTS),
+    # SLO-mix regime: interactive W1 queries interleaved with heavy batch
+    # W3 queries under load — batch fusions monopolize PUs exactly when
+    # an interactive arrival lands, the case class-aware admission
+    # (batch stands aside while interactive waits, bounded by the
+    # throughput floor) and boundary preemption (in-flight batch fusions
+    # yield at the next member boundary) exist for.  Per-class p50/p99
+    # and batch throughput are reported per cell
+    "slo": dict(k=10, wfs=(1, 3), inter_arrival=0.5, slo_mix=True,
+                variants=SLO_VARIANTS),
 }
 
 # the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
@@ -267,22 +328,30 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
         means = default_means(traces)
         cells = out[regime] = {}
         wfs = cfg["wfs"]
+        slo_mix = bool(cfg.get("slo_mix"))
         csv(f"# regime={regime} (k={cfg['k']}, "
             f"wf={'+'.join(f'w{w}' for w in wfs)}, "
             f"inter_arrival={cfg['inter_arrival']}s)")
         csv("world,scheduler,total_s,p50_s,p99_s,throughput_qps,"
             "decode_rounds,kv_migrations,kv_gb,page_hits,hit_tok,"
-            "prefetches,prefetch_hits,widths,groups")
-        for label, kw in cfg.get("variants", variants):
+            "prefetches,prefetch_hits,widths,groups"
+            + (",int_p50_s,int_p99_s,batch_p50_s,batch_p99_s,"
+               "batch_qps,preemptions" if slo_mix else ""))
+        for label, opts in cfg.get("variants", variants):
             row = cells[label] = _variant_metrics(
-                world, means, traces, wfs, cfg["inter_arrival"], kw)
+                world, means, traces, wfs, cfg["inter_arrival"], opts,
+                slo_mix=slo_mix)
             csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
                 f"{row['decode_rounds']},{row['kv_migrations']},"
                 f"{row['kv_bytes'] / 1e9:.2f},{row['kv_page_hits']},"
                 f"{row['kv_hit_tokens']},{row['kv_prefetches']},"
                 f"{row['kv_prefetch_hits']},{_hist(row['decode_widths'])},"
-                f"{_hist(row['decode_groups'])}")
+                f"{_hist(row['decode_groups'])}"
+                + (f",{row['int_p50']:.2f},{row['int_p99']:.2f},"
+                   f"{row['batch_p50']:.2f},{row['batch_p99']:.2f},"
+                   f"{row['batch_throughput']:.3f},{row['preemptions']}"
+                   if slo_mix else ""))
         kvm, kvc = cells.get("hero+kv"), cells.get("hero+kv-const")
         if kvm and kvc:
             csv(f"# {world}/{regime}: modeled migration pricing p99 "
@@ -305,6 +374,14 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 f"{pre_['kv_prefetch_hits']} pages found resident at "
                 "gather; overlap credit hides the spill fetch, so the "
                 "delta is bounded by the tier traffic the run paid)")
+        son, soff = cells.get("hero+slo"), cells.get("hero+adaptive")
+        if son and soff and slo_mix:
+            csv(f"# {world}/{regime}: class-aware scheduling interactive "
+                f"p99 {soff['int_p99']:.2f}s -> {son['int_p99']:.2f}s "
+                f"({son['preemptions']} boundary splits); batch "
+                f"throughput {soff['batch_throughput']:.3f} -> "
+                f"{son['batch_throughput']:.3f} qps "
+                f"(floor {SLO_BATCH_FLOOR:.0%} of class-blind)")
         if "hero+adaptive" not in cells or "hero" not in cells:
             continue
         gain = (cells["hero+adaptive"]["throughput"]
@@ -359,7 +436,7 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
         fixed = row["hero+decode_batch"]["p99"]
         for label in ("hero", "hero+decode_batch", "hero+adaptive",
                       "hero+adaptive-q", "hero+kv-const", "hero+kv",
-                      "hero+pages", "hero+prefetch"):
+                      "hero+pages", "hero+prefetch", "hero+slo"):
             if label not in row:   # per-regime variant sets differ
                 continue
             p99 = row[label]["p99"]
@@ -399,6 +476,25 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
                 "prefix: paged KV p99 no longer beats the monolithic "
                 f"tracker ({pages['p99']:.2f}s vs {off['p99']:.2f}s) on "
                 "the shared-corpus regime")
+    # the SessionOptions class-machinery cell: hero+slo must buy its
+    # interactive p99 win without dropping batch throughput below the
+    # declared floor — judged against the same-traffic class-blind
+    # adaptive scheduler
+    srow = cells.get("slo", {})
+    s_on, s_off = srow.get("hero+slo"), srow.get("hero+adaptive")
+    if s_on and s_off:
+        if s_on["int_p99"] >= s_off["int_p99"]:
+            violations.append(
+                f"slo: hero+slo interactive p99 {s_on['int_p99']:.2f}s no "
+                f"longer beats class-blind {s_off['int_p99']:.2f}s — the "
+                "regime SLO admission + preemption exist for")
+        if s_on["batch_throughput"] < \
+                SLO_BATCH_FLOOR * s_off["batch_throughput"]:
+            violations.append(
+                f"slo: hero+slo batch throughput "
+                f"{s_on['batch_throughput']:.3f} qps fell below "
+                f"{SLO_BATCH_FLOOR:.0%} of class-blind "
+                f"{s_off['batch_throughput']:.3f} qps")
     for v in violations:
         csv(f"# ABLATION GATE: {v}")
     if not violations:

@@ -11,7 +11,7 @@ gracefully instead of hanging.
 """
 import numpy as np
 
-from repro.api import HeroSession
+from repro.api import HeroSession, SessionOptions
 from repro.rag import default_means, sample_traces
 
 
@@ -31,9 +31,11 @@ def main():
     ]:
         lat, red = [], 0
         for i, tr in enumerate(traces):
-            sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
-                               cfg_overrides={"straggler_factor": 2.5},
-                               sim_opts={"seed": i, **kw})
+            sess = HeroSession(
+                world="sd8gen4", family="qwen3", means=means,
+                options=SessionOptions(
+                    cfg_overrides={"straggler_factor": 2.5}),
+                sim_opts={"seed": i, **kw})
             sess.submit(tr, wf=3)
             [res] = sess.run()
             lat.append(res.makespan)

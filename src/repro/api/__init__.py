@@ -9,6 +9,7 @@
 # stay importable from repro.core / repro.serving for the figure benchmarks.
 from repro.api.backends import (  # noqa: F401
     Backend, BackendRun, LiveBackend, SimBackend)
+from repro.api.options import SessionOptions  # noqa: F401
 from repro.api.results import QueryResult, collect_results  # noqa: F401
 from repro.api.session import HeroSession, QueryHandle, make_world  # noqa: F401
 from repro.api.spec import (  # noqa: F401

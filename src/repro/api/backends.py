@@ -69,6 +69,11 @@ class BackendRun:
     kv_prefetches: int = 0
     kv_prefetch_bytes: float = 0.0
     kv_prefetch_hits: int = 0
+    # members released from preempted fused dispatches (boundary splits;
+    # zero unless ``preempt`` is on).  Counted from "preempt" timeline
+    # events on both substrates, so per-query payload-attributed counts
+    # sum to this total
+    preemptions: int = 0
 
 
 class Backend(Protocol):
@@ -137,7 +142,9 @@ class SimBackend:
                           kv_prefetch_bytes=getattr(scheduler.kv,
                                                     "prefetch_bytes", 0.0),
                           kv_prefetch_hits=getattr(scheduler.kv,
-                                                   "prefetch_hits", 0))
+                                                   "prefetch_hits", 0),
+                          preemptions=sum(1 for e in res.timeline
+                                          if e[1] == "preempt"))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -225,4 +232,5 @@ class LiveBackend:
             kv_soft_overflows=getattr(scheduler.kv, "soft_overflows", 0),
             kv_prefetches=getattr(scheduler.kv, "prefetches", 0),
             kv_prefetch_bytes=getattr(scheduler.kv, "prefetch_bytes", 0.0),
-            kv_prefetch_hits=getattr(scheduler.kv, "prefetch_hits", 0))
+            kv_prefetch_hits=getattr(scheduler.kv, "prefetch_hits", 0),
+            preemptions=sum(1 for e in events if e[1] == "preempt"))

@@ -7,7 +7,7 @@ timeline) back into per-query :class:`QueryResult` views.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.dag import DynamicDAG
 
@@ -50,6 +50,19 @@ class QueryResult:
     kv_prefetches: int = 0
     kv_prefetch_bytes: float = 0.0
     kv_prefetch_hits: int = 0
+    # SLO class the query was submitted under, its optional latency
+    # budget (seconds from arrival), and whether the budget held — None
+    # when no deadline was given
+    slo_class: str = "interactive"
+    deadline: Optional[float] = None
+    deadline_met: Optional[bool] = None
+    # times this query's nodes were released from a preempted fused
+    # dispatch (boundary splits; sums to BackendRun.preemptions across
+    # queries on either backend)
+    preemptions: int = 0
+    # the query was withdrawn via QueryHandle.cancel() mid-run (metrics
+    # cover only the work that completed before the cancel took effect)
+    cancelled: bool = False
 
     def utilization(self, pu: str) -> float:
         """Fraction of this query's latency window ``pu`` spent on it."""
@@ -70,9 +83,12 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         pu_busy: Dict[str, float] = {}
         finish = h.arrival_time
         coalesced = rounds = kv_migs = page_hits = hit_tokens = 0
-        hit_declined = prefetches = prefetch_hits = 0
+        hit_declined = prefetches = prefetch_hits = preempts = 0
         kv_bytes = prefetch_bytes = 0.0
         for n in nodes:
+            # preemption releases survive even on nodes a later cancel
+            # finalized without running (start < 0)
+            preempts += n.payload.get("preemptions", 0)
             if n.status != "done" or n.start < 0:
                 continue
             kv_migs += n.payload.get("kv_migrations", 0)
@@ -129,7 +145,13 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             kv_page_hits=page_hits, kv_hit_tokens=hit_tokens,
             kv_hit_declined=hit_declined, kv_prefetches=prefetches,
             kv_prefetch_bytes=prefetch_bytes,
-            kv_prefetch_hits=prefetch_hits)
+            kv_prefetch_hits=prefetch_hits,
+            slo_class=getattr(h, "slo", "interactive"),
+            deadline=getattr(h, "deadline", None),
+            preemptions=preempts,
+            cancelled=bool(getattr(h, "cancelled", False)))
+        if res.deadline is not None:
+            res.deadline_met = res.makespan <= res.deadline
         h.result = res
         out.append(res)
     return out

@@ -22,46 +22,35 @@ profiling, the fitted ``LinearPerfModel``), then serves queries:
 - ``strategy`` picks the scheduler: ``"hero"`` or one of the §6.1
   baselines (``llamacpp_gpu``/``powerserve_npu``/``ayo_like``), with the
   static maps derived from each workflow spec's stage roles.
-- ``coalesce=True`` turns on cross-query batch coalescing (multi-query
-  serving: same-stage ready work of different admitted queries merges
-  into one fused dispatch; equivalent to
-  ``cfg_overrides={"coalesce": True}``).
-- ``batch_policy="adaptive"`` derives the coalesce/decode caps, the
-  coalesce window, and per-round decode token groups online from the
-  profiled grids (``core/batch_policy.py``); ``"fixed"`` (the default)
-  keeps the ``SchedulerConfig`` constants, bit-identical to the
-  pre-adaptive scheduler.
-- ``kv_residency=True`` tracks per-stream KV-cache placement and prices
-  decode-round PU moves by the modeled migration cost (resident
-  footprint ÷ profiled link bandwidth, ``core/kv_residency.py``) instead
-  of the ``decode_migrate_cost`` constant; results then report
-  ``kv_migrations`` / ``kv_bytes_moved`` per query.
-- ``kv_pages=True`` upgrades residency tracking to the paged-KV
-  subsystem (``core/kv_pages.py``): fixed-size pages in a tiered
-  PU-local → DRAM → disk store with LRU-with-pin eviction, page-granular
-  migration, and a content-hash prefix cache that lets prefills whose
-  retrieved-context prefix is already resident skip that work; results
-  then also report ``kv_page_hits`` / ``kv_hit_tokens``; prefix hits
-  obey the hit-or-recompute rule (a demoted page is only reused when
-  fetching it beats re-prefilling — declines show up as
-  ``kv_hit_declined``).
-- ``kv_prefetch=True`` (with ``kv_pages``) adds predictive prefetch:
-  after every committed dispatch pass, the scheduler pre-stages the
-  spill-resident pages of admitted prefill hits and ready-but-waiting
-  decode streams onto their anchor PU, crediting the fitted fetch time
-  against the committed compute window (fetch/compute overlap) instead
-  of paying it on the dispatch critical path; eviction becomes
-  hit-frequency-weighted, and results report ``kv_prefetches`` /
-  ``kv_prefetch_bytes`` / ``kv_prefetch_hits``.
+- All serving-subsystem knobs live on ONE typed object:
+  ``options=SessionOptions(...)`` (``repro.api.options``) — ``coalesce``
+  (cross-query batch coalescing), ``batch_policy`` ("fixed"|"adaptive"
+  caps), ``kv_residency`` (modeled migration pricing), ``kv_pages``
+  (tiered paged-KV store + prefix cache), ``kv_prefetch`` (predictive
+  tier staging), ``preempt`` (boundary-preemptible fused dispatches),
+  ``slo_admission`` (class-aware Eq. 5 gating), plus ``cfg_overrides``
+  as the raw :class:`SchedulerConfig` escape hatch.  Combinations are
+  validated at construction.  The former per-knob kwargs
+  (``coalesce=`` … ``cfg_overrides=``) still work as deprecated shims.
+- SLO classes: ``submit(..., slo="interactive"|"batch",
+  deadline=seconds)`` tags a query's class (admission/preemption
+  optimize interactive p99 under a batch throughput floor when
+  ``slo_admission``/``preempt`` are on) and an optional latency budget;
+  results report ``slo_class`` / ``deadline_met`` / ``preemptions``.
+  ``QueryHandle.cancel()`` withdraws a query — before ``run()`` it is
+  simply dropped, mid-run its remaining nodes collapse through the
+  backends' cancellation machinery.
 - per-query streaming: ``submit(..., on_token=fn, on_stage_done=fn)``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.api.backends import Backend, BackendRun, LiveBackend, SimBackend
+from repro.api.options import SLO_CLASSES, SessionOptions
 from repro.api.results import ADMIT_STAGE, QueryResult, collect_results
 from repro.api.spec import WorkflowSpec, builtin_spec
 from repro.core.dag import DynamicDAG, Node
@@ -107,12 +96,31 @@ class QueryHandle:
     on_stage_done: Optional[Callable] = None
     prefix: str = ""
     result: Optional[QueryResult] = None
+    # SLO class ("interactive" | "batch") and optional latency budget in
+    # seconds from arrival; results carry them back as slo_class /
+    # deadline_met
+    slo: str = "interactive"
+    deadline: Optional[float] = None
+    cancelled: bool = False
+    # the DAG this handle's query is executing on (set for the duration
+    # of run(); lets cancel() reach the live cancellation machinery)
+    _dag: Optional[DynamicDAG] = None
+
+    def cancel(self) -> None:
+        """Withdraw this query.  Before ``run()`` it is dropped at
+        admission; during a run its remaining nodes are flagged and
+        collapse at the backend's next scheduling point (an in-flight
+        fused dispatch shared with other queries drains first)."""
+        self.cancelled = True
+        if self._dag is not None:
+            self._dag.request_cancel(self.prefix)
 
 
 class HeroSession:
     def __init__(self, world: Union[str, SoCSpec] = "sd8gen4",
                  family: str = "qwen3", strategy: str = "hero",
                  backend: Union[str, Backend] = "sim",
+                 options: Optional[SessionOptions] = None,
                  cfg_overrides: Optional[dict] = None,
                  coalesce: Optional[bool] = None,
                  batch_policy: Optional[str] = None,
@@ -129,21 +137,26 @@ class HeroSession:
             raise KeyError(f"strategy {strategy!r}; pick from {STRATEGIES}")
         self.soc, self.gt, self.perf = make_world(world, family)
         self.strategy = strategy
-        if coalesce is not None:    # sugar for the multi-query serving knob
-            cfg_overrides = {**(cfg_overrides or {}), "coalesce": coalesce}
-        if batch_policy is not None:   # sugar for the adaptive-caps knob
-            cfg_overrides = {**(cfg_overrides or {}),
-                             "batch_policy": batch_policy}
-        if kv_residency is not None:   # sugar for KV-residency tracking
-            cfg_overrides = {**(cfg_overrides or {}),
-                             "kv_residency": kv_residency}
-        if kv_pages is not None:       # sugar for the paged-KV subsystem
-            cfg_overrides = {**(cfg_overrides or {}),
-                             "kv_pages": kv_pages}
-        if kv_prefetch is not None:    # sugar for predictive prefetch
-            cfg_overrides = {**(cfg_overrides or {}),
-                             "kv_prefetch": kv_prefetch}
-        self.cfg_overrides = cfg_overrides
+        # deprecated per-knob kwargs: thin shims over SessionOptions (the
+        # typed surface, which also validates combinations)
+        legacy = {k: v for k, v in (("coalesce", coalesce),
+                                    ("batch_policy", batch_policy),
+                                    ("kv_residency", kv_residency),
+                                    ("kv_pages", kv_pages),
+                                    ("kv_prefetch", kv_prefetch),
+                                    ("cfg_overrides", cfg_overrides))
+                  if v is not None}
+        if legacy:
+            warnings.warn(
+                f"HeroSession kwargs {sorted(legacy)} are deprecated; pass "
+                f"options=SessionOptions(...) instead",
+                DeprecationWarning, stacklevel=2)
+            if options is not None:
+                raise ValueError("pass options= OR the deprecated per-knob "
+                                 "kwargs, not both")
+            options = SessionOptions(**legacy)
+        self.options = options if options is not None else SessionOptions()
+        self.cfg_overrides = self.options.scheduler_overrides()
         self.fine_grained = fine_grained
         self.means = means
         self.pus = list(pus) if pus is not None else [p.name
@@ -165,19 +178,30 @@ class HeroSession:
     def submit(self, trace, wf: Optional[int] = None,
                spec: Optional[WorkflowSpec] = None,
                arrival_time: float = 0.0,
+               slo: str = "interactive",
+               deadline: Optional[float] = None,
                on_token: Optional[Callable] = None,
                on_stage_done: Optional[Callable] = None) -> QueryHandle:
         """Queue one query.  ``wf`` selects a builtin workflow (1-3);
         ``spec`` supplies a custom :class:`WorkflowSpec` instead.
         ``arrival_time`` is run-relative (simulated seconds on the sim
         backend, wall seconds on the live backend); the query's root
-        stages are gated until then."""
+        stages are gated until then.  ``slo`` tags the query's class
+        ("interactive" holds p99, "batch" fills throughput — acted on
+        when ``SessionOptions.slo_admission``/``preempt`` are on);
+        ``deadline`` is an optional latency budget in seconds from
+        arrival, reported back as ``QueryResult.deadline_met``."""
         if spec is None:
             spec = builtin_spec(wf if wf is not None else 2)
         elif wf is not None:
             raise ValueError("pass either wf= or spec=, not both")
+        if slo not in SLO_CLASSES:
+            raise ValueError(f"slo {slo!r}; pick from {SLO_CLASSES}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be positive, got {deadline}")
         h = QueryHandle(qid=len(self._handles), trace=trace, spec=spec,
                         arrival_time=float(arrival_time),
+                        slo=slo, deadline=deadline,
                         on_token=on_token, on_stage_done=on_stage_done)
         self._handles.append(h)
         return h
@@ -187,7 +211,13 @@ class HeroSession:
         return list(self._handles)
 
     def reset(self) -> None:
+        """Drop queued queries AND the previous run's residue: the last
+        :class:`BackendRun` and the handles' backend attachments (a
+        reset session used to keep serving stale ``last_run`` state)."""
+        for h in self._handles:
+            h._dag = None
         self._handles = []
+        self.last_run = None
 
     # -- execution -----------------------------------------------------------
     def run(self, mode: str = "shared",
@@ -197,6 +227,8 @@ class HeroSession:
         per-query admission gates.  ``mode="isolated"``: fresh DAG +
         scheduler per query (arrival times ignored) — the paper's
         single-query latency protocol."""
+        # queries cancelled before the run starts are simply dropped
+        self._handles = [h for h in self._handles if not h.cancelled]
         if not self._handles:
             return []
         timeout = timeout if timeout is not None else self.timeout
@@ -230,10 +262,19 @@ class HeroSession:
                                     payload={"arrival": h.arrival_time})).id
             h.spec.build_dag(h.trace, fine_grained=fine, prefix=h.prefix,
                              dag=dag, gate_dep=gate)
+            h._dag = dag    # cancel() routes through the live DAG
         sched = self._scheduler(cfg, specs)
-        run = self.backend.execute(dag, sched,
-                                   observer=self._observer(handles),
-                                   timeout=timeout)
+        # query-namespace -> SLO class: covers every node of the query,
+        # including ones expanders create mid-run
+        sched.slo_classes = {(h.prefix[:-1] if h.prefix else ""): h.slo
+                             for h in handles}
+        try:
+            run = self.backend.execute(dag, sched,
+                                       observer=self._observer(handles),
+                                       timeout=timeout)
+        finally:
+            for h in handles:
+                h._dag = None
         self.last_run = run
         return collect_results(dag, handles, run, self.backend.name)
 
@@ -247,10 +288,15 @@ class HeroSession:
             fine = (self.fine_grained if self.fine_grained is not None
                     else cfg.enable_partition)
             dag = h.spec.build_dag(h.trace, fine_grained=fine)
+            h._dag = dag
             sched = self._scheduler(cfg, [h.spec])
-            run = self.backend.execute(dag, sched,
-                                       observer=self._observer([h]),
-                                       timeout=timeout)
+            sched.slo_classes = {"": h.slo}
+            try:
+                run = self.backend.execute(dag, sched,
+                                           observer=self._observer([h]),
+                                           timeout=timeout)
+            finally:
+                h._dag = None
             self.last_run = run
             out.extend(collect_results(dag, [h], run, self.backend.name))
         return out

@@ -72,6 +72,10 @@ class DynamicDAG:
         # boundaries report served tokens / leaves to it, and fuse_decode
         # consults it to anchor rounds with conflicting batch_pu history
         self.kv = None
+        # count of cancel-requested, not-yet-finalized nodes: backends
+        # skip the reap scan entirely while it is zero (the hot-path
+        # guard that keeps cancellation free when unused)
+        self._cancel_pending = 0
 
     # -- construction -------------------------------------------------------
     def add(self, node: Node) -> Node:
@@ -285,6 +289,89 @@ class DynamicDAG:
         self.add(fused)
         fused.criticality = max(m.criticality for m in members)
         return fused
+
+    def preempt_fused(self, fused: Node, keep: int,
+                      prefer_pu: Optional[str] = None,
+                      t: float = 0.0) -> List[Node]:
+        """Split a RUNNING fused batchable dispatch at a member boundary:
+        the first ``keep`` members stay in the (truncated) dispatch and
+        complete with it; the rest are *released* — back to READY with
+        their state in place, stamped ``preemptions`` (+1),
+        ``preempt_prefer_pu`` (the PU they were split off, which
+        re-placement anchors to unless the KV tracker knows better) and
+        ``preempt_t`` (release time ``t`` — the SLO deferral floor's
+        clock restarts here, so a released batch member queues a full
+        deferral window again instead of re-dispatching into the very
+        contention it was split to relieve).
+        Nothing is discarded: the in-progress member finishes inside the
+        kept slice, so preemption costs only the released members' wait.
+        Returns the released members (empty when the boundary falls past
+        the last member — the dispatch simply runs out)."""
+        assert fused.status == RUNNING, fused.status
+        members = fused.payload["members"]
+        keep = max(1, min(keep, len(members)))
+        if keep >= len(members):
+            return []
+        kept, released = members[:keep], members[keep:]
+        fused.payload["members"] = kept
+        fused.workload = sum(m.workload for m in kept)
+        for m in released:
+            m.status = READY
+            m.payload.pop("fused_into", None)
+            m.payload["preemptions"] = m.payload.get("preemptions", 0) + 1
+            m.payload["preempt_t"] = t
+            if prefer_pu is not None:
+                m.payload["preempt_prefer_pu"] = prefer_pu
+        return released
+
+    # -- user-requested cancellation -------------------------------------------
+    def request_cancel(self, prefix: str) -> int:
+        """Flag every unfinished node of an admitted query (id prefix)
+        for cancellation.  Finalization is deferred to the backend's
+        next scheduling point (``reap_cancelled`` + in-flight abort) so
+        both substrates observe cancellation at the same granularity.
+        Returns the number of nodes flagged."""
+        flagged = 0
+        for n in self.nodes.values():
+            if (n.status != DONE and n.id.startswith(prefix)
+                    and not n.payload.get("cancel_requested")):
+                n.payload["cancel_requested"] = True
+                flagged += 1
+        self._cancel_pending += flagged
+        return flagged
+
+    def reap_cancelled(self, t: float) -> List[Node]:
+        """Finalize cancel-requested PENDING/READY nodes: marked DONE at
+        ``t`` with ``payload["cancelled"]`` and their expanders dropped
+        (a cancelled query must not spawn new work), decode streams
+        release their KV footprint, and successors refresh — so a
+        cancelled query's whole remaining chain collapses in one
+        fixpoint sweep.  RUNNING nodes are the backend's job (abort the
+        in-flight task, then finalize); members absorbed into a live
+        fused dispatch ride it to completion first (best-effort — the
+        fused work is shared with other queries)."""
+        reaped: List[Node] = []
+        progress = True
+        while progress:
+            progress = False
+            for n in list(self.nodes.values()):
+                if (n.status not in (PENDING, READY)
+                        or not n.payload.get("cancel_requested")
+                        or "fused_into" in n.payload):
+                    continue
+                n.status, n.finish = DONE, t
+                n.expander = None
+                n.payload["cancelled"] = True
+                if self.kv is not None and n.kind == "stream_decode":
+                    self.kv.release(n)
+                for s in self._succ.get(n.id, ()):
+                    self._refresh_status(self.nodes[s])
+                reaped.append(n)
+                progress = True
+        self._cancel_pending = sum(
+            1 for n in self.nodes.values()
+            if n.payload.get("cancel_requested") and n.status != DONE)
+        return reaped
 
     def unfuse(self, fused: Node) -> List[Node]:
         """Dissolve an un-dispatched fused node; members rejoin the ready

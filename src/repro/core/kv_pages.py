@@ -374,6 +374,25 @@ class PagedKVCache:
     def tracked(self, m: Node) -> Optional[PagedStream]:
         return self._streams.get(stream_key(m))
 
+    def resident_pu(self, m: Node) -> Optional[str]:
+        """The PU holding most of ``m``'s stream's page bytes — the
+        anchor preempted-member re-placement prefers.  Spill tiers
+        ("dram"/"disk") are not placement anchors and are excluded;
+        with no PU-resident pages the stream's nominal PU stands in.
+        Deterministic tie-break by PU name, as in ``prefer_pu``."""
+        st = self._streams.get(stream_key(m))
+        if st is None:
+            return None
+        totals: Dict[str, float] = {}
+        for pid in st.pages:
+            pg = self._pages[pid]
+            if pg.tier not in (DRAM, DISK):
+                totals[pg.tier] = (totals.get(pg.tier, 0.0)
+                                   + self._page_bytes(pg))
+        if totals:
+            return max(sorted(totals), key=lambda p: totals[p])
+        return st.pu
+
     def prefer_pu(self, members: Sequence[Node]) -> Optional[str]:
         """Same anchor-resolution contract as the monolith: the PU holding
         the largest resident footprint, deterministic tie-breaks."""

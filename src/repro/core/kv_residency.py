@@ -115,6 +115,13 @@ class KVResidency:
     def tracked(self, m: Node) -> Optional[StreamKV]:
         return self._streams.get(stream_key(m))
 
+    def resident_pu(self, m: Node) -> Optional[str]:
+        """The PU holding ``m``'s stream's KV cache right now — the
+        anchor preempted-member re-placement prefers (the released
+        member's state stayed put).  ``None`` when nothing is tracked."""
+        st = self._streams.get(stream_key(m))
+        return st.pu if st is not None else None
+
     # -- placement preference ------------------------------------------------
     def prefer_pu(self, members: Sequence[Node]) -> Optional[str]:
         """The PU holding the largest resident footprint among ``members``

@@ -44,6 +44,26 @@ def dispatch_passes(node: "Node", batch: int) -> int:
     return ceil_passes(node.workload, batch)
 
 
+def fused_boundary_index(workloads: Sequence[int], done_frac: float) -> int:
+    """Members to KEEP when splitting a fused dispatch at its next member
+    boundary, given the fraction of its total work already executed.
+
+    Members execute in stored order, so the boundary nearest the true
+    progress point is the first index whose cumulative workload reaches
+    ``done_frac`` of the total — the in-progress member finishes (its
+    partial work is never discarded), everything after it is releasable.
+    Always keeps at least one member; ``done_frac ≥ 1`` keeps all (the
+    dispatch is effectively finished — nothing left to release)."""
+    total = sum(max(w, 1) for w in workloads)
+    target = min(max(done_frac, 0.0), 1.0) * total
+    cum = 0
+    for i, w in enumerate(workloads):
+        cum += max(w, 1)
+        if cum >= target:
+            return max(i + 1, 1)
+    return max(len(workloads), 1)
+
+
 def best_batch(perf: LinearPerfModel, stage: str, pu: str, L: int,
                candidates: Sequence[int] = DEFAULT_BATCH_CANDIDATES
                ) -> Tuple[int, float]:

@@ -116,6 +116,25 @@ class SchedulerConfig:
     # coalesce window, and per-round token groups online from the
     # profiled (width, group) / batch grids (core/batch_policy.py)
     batch_policy: str = "fixed"
+    # preemptible fused dispatches: when a higher-SLO-class node is left
+    # READY after a pass, an in-flight fused batchable dispatch of lower
+    # class may be split at its next member boundary (members past the
+    # boundary return READY with their state in place) instead of the
+    # cancel-and-redispatch path, which discards completed work and pays
+    # a modeled migration.  Off = fused dispatches run whole
+    # (bit-identical to the PR 2-7 goldens).
+    preempt: bool = False
+    # SLO-class, tail-aware admission: nodes carry a query class
+    # ("interactive" | "batch"); interactive candidates pierce the Eq. 5
+    # gate's batched-mode stand-down, and batch candidates defer while
+    # interactive work waits — bounded by the throughput floor below.
+    # Off = class-blind admission (bit-identical goldens).
+    slo_admission: bool = False
+    # throughput floor for batch deferral, in units of the batch class's
+    # tracked inter-arrival tau: a deferred batch node that has waited
+    # longer than slo_floor_mult × tau dispatches regardless, so batch
+    # throughput degrades boundedly under interactive pressure
+    slo_floor_mult: float = 4.0
 
 
 @dataclass
@@ -167,6 +186,12 @@ class HeroScheduler:
         # last-seen decode_rounds per resident id: detects boundary
         # re-entries (same node id, another ready-pool arrival)
         self._seen_rounds: Dict[str, int] = {}
+        # SLO classes per admitted-query namespace (HeroSession fills this
+        # from submit(slo=...)); nodes may also carry payload["slo"]
+        self.slo_classes: Dict[str, str] = {}
+        # first time each node entered the ready pool (slo_admission only:
+        # feeds the batch-deferral throughput floor)
+        self._ready_since: Dict[str, float] = {}
         # chosen-shape telemetry per dispatch (benchmarks report these):
         # histograms of resident decode widths, per-round token groups,
         # and fused batchable dispatch sizes
@@ -208,6 +233,14 @@ class HeroScheduler:
                 # queueing-delay estimate
                 if n.kind != "io":
                     self.arrivals.observe((n.stage, n.kind), now)
+                if cfgn.slo_admission:
+                    self._ready_since[n.id] = now
+                    if n.kind != "io":
+                        # per-class arrival rate: the batch class's tau
+                        # bounds how long the deferral floor may hold a
+                        # batch candidate back
+                        self.arrivals.observe(("slo", self._slo_class(n)),
+                                              now)
                 if (n.kind == "stream_prefill"
                         and getattr(self.kv, "paged", False)):
                     # prefix cache: trim the prefill by its longest
@@ -299,6 +332,18 @@ class HeroScheduler:
                 r_tmp.remove(v_cand)
                 continue
 
+            if (cfgn.slo_admission and self._slo_rank(v_cand) == 0
+                    and self._defer_batch(v_cand, r_tmp, idle, now)):
+                # batch class stands aside while interactive work waits
+                # for a PU it could use — until the throughput floor
+                # (slo_floor_mult × batch-class tau) says it has waited
+                # long enough
+                r_tmp.remove(v_cand)
+                continue
+            gate_v = self._gate_for(v_cand, gate_star, running_star,
+                                    batched_mode) \
+                if cfgn.slo_admission else gate_star
+
             best: Optional[Tuple[float, Dispatch, bool]] = None
             capable = self._capable_pus(v_cand, idle + list(busy_until))
             # resident decode batch: Eq. 3 enumerates configs at the batch's
@@ -339,7 +384,7 @@ class HeroScheduler:
                         passes = ceil_passes(v_cand.workload, batch)
                     f_cand = start + passes * p0 * phi          # line 12 (Eq. 2)
                     w_b = cc.contention_penalty(
-                        self.perf, gate_star, b, B_now, now
+                        self.perf, gate_v, b, B_now, now
                     ) if (cfgn.enable_concurrency and is_idle) else 0.0
                     score = f_cand + cfgn.alpha * w_b           # line 13 (Eq. 5)
                     mig_s = 0.0
@@ -365,6 +410,25 @@ class HeroScheduler:
                         # legacy constant: a pure score nudge, never an
                         # ETA term (bit-exact with the kv-off goldens)
                         score += cfgn.decode_migrate_cost
+                    if (cfgn.preempt and "members" not in v_cand.payload
+                            and v_cand.payload.get("preempt_prefer_pu")
+                            is not None
+                            and not (self.kv is not None
+                                     and v_cand.kind == "stream_decode")):
+                        # residency-aware re-placement of a preempted
+                        # member: its state stayed put, so anchor to the
+                        # KV-resident PU when the tracker knows one, else
+                        # the PU it was split off.  A score nudge only
+                        # (no ETA term) — stream_decode under a tracker
+                        # is excluded because mig_s already prices the
+                        # move from true residency.
+                        anchor = v_cand.payload["preempt_prefer_pu"]
+                        if self.kv is not None:
+                            rp = self.kv.resident_pu(v_cand)
+                            if rp is not None:
+                                anchor = rp
+                        if pu != anchor:
+                            score += cfgn.decode_migrate_cost
                     d = Dispatch(v_cand, pu, batch, p0, b, mig_s)
                     if best is None or score < best[0]:
                         best = (score, d, is_idle)
@@ -373,20 +437,20 @@ class HeroScheduler:
                 r_tmp.remove(v_cand)
                 continue
             _, d, _ = best
-            if (cfgn.enable_concurrency and gate_star is not None
-                    and gate_star.id != d.node.id
-                    and gate_star.config
-                    and gate_star.config[0] != "io"):
+            if (cfgn.enable_concurrency and gate_v is not None
+                    and gate_v.id != d.node.id
+                    and gate_v.config
+                    and gate_v.config[0] != "io"):
                 # Eq. 5 admission gate: parallelism is admitted only when it
                 # does not significantly impede critical-path progress —
                 # defer when the contention damage to v* exceeds the overlap
                 # benefit (the candidate's own runtime).
-                phi0 = self.perf.phi(gate_star.stage, B_now)
-                phi1 = self.perf.phi(gate_star.stage,
+                phi0 = self.perf.phi(gate_v.stage, B_now)
+                phi1 = self.perf.phi(gate_v.stage,
                                      B_now + d.bandwidth)
-                sp, sb = gate_star.config
-                p_star = (self.perf.p0(gate_star.stage, sp, sb)
-                          * ceil_passes(gate_star.workload, sb))
+                sp, sb = gate_v.config
+                p_star = (self.perf.p0(gate_v.stage, sp, sb)
+                          * ceil_passes(gate_v.workload, sb))
                 damage = (phi1 - phi0) * p_star
                 # dispatch_passes: a decode round's overlap benefit is
                 # one token-group pass, not the residents' whole horizon
@@ -420,7 +484,142 @@ class HeroScheduler:
                 # them would leak an entry per boundary in long-lived
                 # continuous serving
                 self._fifo_seq.pop(f.id, None)
+        if cfgn.preempt:
+            # `idle` has had every committed dispatch removed, so it is
+            # exactly the capacity left over after this pass
+            self._preempt_pass(dag, decisions, now, idle)
         return decisions
+
+    # -- SLO classes & preemption ------------------------------------------
+    def _slo_class(self, node: Node) -> str:
+        """A node's SLO class: its own payload stamp, else its admitted
+        query's class (submit(slo=...)), else interactive — unclassified
+        work keeps the latency-optimal treatment it always had."""
+        cls = node.payload.get("slo")
+        if cls is None:
+            cls = self.slo_classes.get(self._query_key(node.id),
+                                       "interactive")
+        return cls
+
+    def _slo_rank(self, node: Node) -> int:
+        """Class priority (higher = more latency-sensitive).  A fused
+        dispatch ranks as its most sensitive member — a fusion with any
+        interactive member is never treated as preemptible batch work."""
+        members = node.payload.get("members")
+        if members:
+            return max(self._slo_rank(m) for m in members)
+        return 1 if self._slo_class(node) == "interactive" else 0
+
+    def _defer_batch(self, v: Node, r_tmp: Sequence[Node],
+                     idle: Sequence[str], now: float) -> bool:
+        """Should batch-class candidate ``v`` stand aside this pass?
+        Only while some interactive node is waiting for an idle PU that
+        could actually serve it (deferring for unservable work is pure
+        starvation), and only until ``v`` has waited past the throughput
+        floor: ``slo_floor_mult`` × the batch class's inter-arrival tau.
+        With no tau yet (fewer than two batch arrivals) the floor cannot
+        be priced and interactive keeps priority."""
+        waiting = [n for n in r_tmp
+                   if n is not v and n.kind != "io"
+                   and self._slo_rank(n) >= 1
+                   and self._capable_pus(n, idle)]
+        if not waiting:
+            return False
+        tau_b = self.arrivals.tau(("slo", "batch"))
+        members = v.payload.get("members") or [v]
+        # a preemption release restarts the member's deferral clock
+        # (payload["preempt_t"]): the floor prices a full waiting window
+        # from the split, not from the original arrival — otherwise a
+        # released member's window is already spent and it re-dispatches
+        # straight back into the contention it was split to relieve
+        since = min(max(self._ready_since.get(m.id, now),
+                        m.payload.get("preempt_t", 0.0))
+                    for m in members)
+        if tau_b is not None and (now - since) > \
+                self.cfg.slo_floor_mult * tau_b:
+            return False
+        return True
+
+    def _gate_for(self, v: Node, gate_star: Optional[Node],
+                  running_star: Optional[Node],
+                  batched_mode: bool) -> Optional[Node]:
+        """Class-aware Eq. 5 gate: the candidate faces the contention
+        gate only against running work of equal-or-higher class.  An
+        interactive candidate pierces the gate a batch v* would impose;
+        a batch candidate in batched mode loses the stand-down and faces
+        the gate the running critical node imposes (batched_mode exists
+        to protect cross-query throughput — batch-class work is exactly
+        the traffic that may be throttled for it)."""
+        rank = self._slo_rank(v)
+        if gate_star is not None and rank > self._slo_rank(gate_star):
+            return None
+        if (gate_star is None and batched_mode and running_star is not None
+                and running_star.config
+                and running_star.config[0] != "io"
+                and rank < self._slo_rank(running_star)):
+            return running_star
+        return gate_star
+
+    def preempt_price(self, node: Node, now: float) -> float:
+        """Modeled cost of splitting ``node`` at its next member
+        boundary: zero — no completed member work is discarded, the
+        in-progress member finishes, and released members' KV/state
+        stays put (re-placement anchors to it)."""
+        return 0.0
+
+    def cancel_price(self, node: Node, now: float) -> float:
+        """Modeled cost of the legacy cancel-and-redispatch: every
+        second of completed work since dispatch is discarded, and each
+        member pays a re-placement migration (the constant — cancel
+        drops placement state, so the modeled per-stream price is not
+        even available).  Strictly positive for any running dispatch,
+        so preemption is always priced cheaper."""
+        members = node.payload.get("members") or [node]
+        lost = max(now - node.start, 0.0) if node.start >= 0 else 0.0
+        return lost + self.cfg.decode_migrate_cost * len(members)
+
+    def _preempt_pass(self, dag: DynamicDAG, decisions: List[Dispatch],
+                      now: float, idle_left: Sequence[str]) -> None:
+        """Flag in-flight fused batchable dispatches for a boundary
+        split: if a higher-class node is still READY after this pass
+        AND genuinely starved — no idle PU left that could serve it, so
+        a running fusion on one of its capable PUs is what blocks it —
+        that fusion gets ``payload["preempt_split"]`` whenever the split
+        is priced cheaper than cancellation; the backend performs the
+        split at the member boundary nearest its true progress (decode
+        rounds already yield at token-group boundaries and are left
+        alone).  A ready node that merely *deferred* for a busy fast PU
+        while capable capacity sat idle is not starved — splitting for
+        it would release members into pure contention churn."""
+        dispatched = {d.node.id for d in decisions}
+        blocked = [b for b in dag.ready()
+                   if b.kind != "io" and b.id not in dispatched
+                   and self._slo_rank(b) > 0
+                   and not self._capable_pus(b, idle_left)]
+        if not blocked:
+            return
+        for n in dag.running():
+            if ("members" not in n.payload
+                    or n.payload.get("decode_round")
+                    or n.config is None or n.config[0] == "io"
+                    or n.payload.get("preempt_split")
+                    # bounded preemption: a member is released at most
+                    # once — re-splitting a fusion of already-released
+                    # members trades no new capacity for another round
+                    # of re-dispatch churn (and its bandwidth contention
+                    # is exactly what slows the interactive work the
+                    # split is meant to protect)
+                    or any(m.payload.get("preemptions", 0)
+                           for m in n.payload["members"])):
+                continue
+            rank = self._slo_rank(n)
+            for b in blocked:
+                if (self._slo_rank(b) > rank
+                        and n.config[0] in self._capable_pus(b, self.pus)
+                        and self.preempt_price(n, now)
+                        < self.cancel_price(n, now)):
+                    n.payload["preempt_split"] = True
+                    break
 
     # -- predictive prefetch ---------------------------------------------------
     def _prefetch_pass(self, dag: DynamicDAG, decisions: List[Dispatch],

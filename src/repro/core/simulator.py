@@ -21,7 +21,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.dag import DynamicDAG, Node
-from repro.core.partitioner import ceil_passes, dispatch_passes
+from repro.core.partitioner import (ceil_passes, dispatch_passes,
+                                    fused_boundary_index)
 from repro.core.perf_model import Config, GroundTruthPerf
 from repro.core.scheduler import Dispatch, HeroScheduler
 
@@ -36,6 +37,7 @@ class ActiveTask:
     rate: float = 1.0         # 1/φ(B(t)) — updated on every event
     dispatched_at: float = 0.0
     predicted: float = 0.0    # scheduler's ETA (straggler detection)
+    work_total: float = 0.0   # seconds at dispatch (progress = 1 - left/total)
 
 
 @dataclass
@@ -111,16 +113,28 @@ class Simulator:
                     for a in active.values()}
 
         def dispatch(now: float):
-            idle = [p for p, f in pu_free.items() if f]
-            if not idle:
-                return
-            decisions = self.sched.dispatch_pass(dag, now, idle, B_total(),
-                                                 busy_until(now))
-            for d in decisions:
-                self._start(d, now, active, pu_free, timeline)
-                result.dispatches += 1
-            if decisions:
-                refresh_rates()
+            while True:
+                if dag._cancel_pending:
+                    self._reap(dag, active, pu_free, timeline, now)
+                    refresh_rates()   # aborted tasks left the active set
+                idle = [p for p, f in pu_free.items() if f]
+                if not idle:
+                    return
+                decisions = self.sched.dispatch_pass(dag, now, idle,
+                                                     B_total(),
+                                                     busy_until(now))
+                for d in decisions:
+                    self._start(d, now, active, pu_free, timeline)
+                    result.dispatches += 1
+                if decisions:
+                    refresh_rates()
+                # boundary splits release READY members mid-pass: loop so
+                # they can take a still-idle PU at the same instant.  Each
+                # split strictly shrinks a fused membership, so this
+                # terminates; with preempt off the body runs exactly once.
+                if not (self.sched.cfg.preempt and self._apply_preemptions(
+                        dag, active, now, timeline)):
+                    return
 
         dispatch(t)
         guard = 0
@@ -129,6 +143,10 @@ class Simulator:
             if guard > 200_000:
                 raise RuntimeError("simulator livelock")
             if not active:
+                if dag._cancel_pending:
+                    self._reap(dag, active, pu_free, timeline, t)
+                    if not dag.unfinished():
+                        break
                 # nothing running but work remains: deadlock unless new
                 # dispatch succeeds (e.g. after elastic PU change)
                 decisions = self.sched.dispatch_pass(
@@ -266,10 +284,68 @@ class Simulator:
             # in the ETA so straggler detection and busy_until see the
             # same total the physics above actually pays
             predicted=(d.predicted_p0 * dispatch_passes(d.node, d.batch)
-                       + d.migrate_s))
+                       + d.migrate_s),
+            work_total=work)
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
         self._note(timeline, now, "start", d.node)
+
+    def _apply_preemptions(self, dag: DynamicDAG, active, t,
+                           timeline) -> List[Node]:
+        """Execute the boundary splits the scheduler flagged
+        (``payload["preempt_split"]``): true progress (1 − left/total of
+        ground-truth work) picks the member boundary, the released
+        members return READY with their state in place, and the kept
+        slice's remaining work / ETA shrink proportionally — the
+        in-progress member is inside the kept slice by construction, so
+        no executed seconds are discarded."""
+        released_all: List[Node] = []
+        for a in list(active.values()):
+            n = a.node
+            if not n.payload.pop("preempt_split", False):
+                continue
+            done_frac = (1.0 - a.work_left / a.work_total
+                         if a.work_total > 0 else 0.0)
+            w_before = max(n.workload, 1)
+            keep = fused_boundary_index(
+                [m.workload for m in n.payload["members"]], done_frac)
+            released = dag.preempt_fused(n, keep, prefer_pu=a.pu, t=t)
+            if not released:
+                continue
+            scale = max(n.workload, 1) / w_before
+            done_s = a.work_total - a.work_left
+            a.work_total *= scale
+            a.work_left = max(a.work_total - done_s, 0.0)
+            a.predicted *= scale
+            for m in released:
+                self._note(timeline, t, "preempt", m)
+            released_all.extend(released)
+        return released_all
+
+    def _reap(self, dag: DynamicDAG, active, pu_free, timeline, t):
+        """Finalize cancel-requested work at a scheduling point: queued
+        nodes collapse via ``reap_cancelled``; in-flight flagged tasks
+        are aborted (PU freed, node finalized as cancelled) — then one
+        more sweep catches successors the aborts just readied."""
+        for n in dag.reap_cancelled(t):
+            self._note(timeline, t, "cancelled", n)
+        for nid in [k for k, a in active.items()
+                    if a.node.payload.get("cancel_requested")]:
+            a = active.pop(nid)
+            if a.pu != "io":
+                pu_free[a.pu] = True
+            n = a.node
+            n.status, n.finish = "done", t
+            n.expander = None
+            n.payload["cancelled"] = True
+            if dag.kv is not None and n.kind == "stream_decode":
+                dag.kv.release(n)
+            for s in dag._succ.get(nid, ()):
+                dag._refresh_status(dag.nodes[s])
+            self._note(timeline, t, "cancelled", n)
+        if dag._cancel_pending:
+            for n in dag.reap_cancelled(t):
+                self._note(timeline, t, "cancelled", n)
 
     def _cancel(self, nid: str, active, pu_free, timeline, t):
         task = active.pop(nid)

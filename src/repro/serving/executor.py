@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.dag import DynamicDAG, Node
-from repro.core.partitioner import dispatch_passes
+from repro.core.partitioner import dispatch_passes, fused_boundary_index
 from repro.core.scheduler import Dispatch, HeroScheduler
 
 StageFn = Callable[[Node, int], Any]   # (node, batch) -> result
@@ -166,6 +166,30 @@ class HeroRuntime:
             return sum(d.bandwidth for _, d, _ in inflight.values())
 
         def dispatch():
+            if dag._cancel_pending:
+                # user-requested cancellation, observed at the same
+                # granularity as the simulator: queued nodes collapse,
+                # in-flight flagged tasks are cancelled cooperatively
+                # (the running fn is non-preemptible — it drains
+                # off-book, exactly like a cancelled straggler)
+                for n in dag.reap_cancelled(now()):
+                    self._emit(now(), "cancelled", n)
+                for nid in [k for k, (_tk, dd, _r) in inflight.items()
+                            if dd.node.payload.get("cancel_requested")]:
+                    tk, dd, _r = inflight.pop(nid)
+                    tk.cancelled = True
+                    n = dd.node
+                    n.status, n.finish = "done", now()
+                    n.expander = None
+                    n.payload["cancelled"] = True
+                    if dag.kv is not None and n.kind == "stream_decode":
+                        dag.kv.release(n)
+                    for s in dag._succ.get(nid, ()):
+                        dag._refresh_status(dag.nodes[s])
+                    self._emit(now(), "cancelled", n)
+                if dag._cancel_pending:
+                    for n in dag.reap_cancelled(now()):
+                        self._emit(now(), "cancelled", n)
             # io is unbounded concurrency (network threads), matching the
             # simulator — a sleeping web call or admission timer must not
             # block the io lane for other queries
@@ -196,6 +220,32 @@ class HeroRuntime:
             progressed = False
             for nid in list(inflight):
                 task, d, retries = inflight[nid]
+                if d.node.payload.pop("preempt_split", False) and \
+                        not task.done_evt.is_set() and not task.cancelled:
+                    # boundary split flagged by the scheduler: wall-clock
+                    # progress against the ETA picks the member boundary;
+                    # released members return READY and re-place.  The
+                    # running fn is non-preemptible, so on this substrate
+                    # the split is bookkeeping (the fn finishes its
+                    # original batch; mark_done fans out to kept members
+                    # only) — preempt_yield then exempts the shrunken
+                    # node from straggler speculation, since its ETA no
+                    # longer covers the fn's true remaining work
+                    frac = 0.0
+                    if task.started:
+                        frac = min((time.monotonic() - task.started)
+                                   / max(predicted_total(d), 1e-9), 1.0)
+                    keep = fused_boundary_index(
+                        [m.workload for m in d.node.payload["members"]],
+                        frac)
+                    released = dag.preempt_fused(d.node, keep,
+                                                 prefer_pu=d.pu,
+                                                 t=now())
+                    if released:
+                        d.node.payload["preempt_yield"] = True
+                        for m in released:
+                            self._emit(now(), "preempt", m)
+                        progressed = True
                 if task.done_evt.is_set():
                     del inflight[nid]
                     progressed = True
@@ -232,7 +282,8 @@ class HeroRuntime:
                     # a jitter floor and a per-node speculation cap)
                     eta = max(predicted_total(d) *
                               self.sched.cfg.straggler_factor, 0.05)
-                    can_spec = d.node.payload.get("redispatches", 0) < 4
+                    can_spec = (d.node.payload.get("redispatches", 0) < 4
+                                and not d.node.payload.get("preempt_yield"))
                     if (can_spec and d.pu in self.executors
                             and time.monotonic() - task.started > eta):
                         task.cancelled = True
