@@ -113,6 +113,21 @@ def compare(current: dict, baseline: dict, tol: float):
                     f"{cur_row.get('kv_prefetches', 0)}, prefetch_hits: "
                     f"{base_row.get('kv_prefetch_hits', 0)} -> "
                     f"{cur_row.get('kv_prefetch_hits', 0)}")
+            # speculative-decoding telemetry (specdec regime only):
+            # drafted/accepted totals and the decode token-rate are
+            # informational here — the structural claim below enforces
+            # the rate win and non-zero drafting
+            if "drafted" in cur_row:
+                report.append(
+                    f"{regime}/{variant} decode_tok_rate: "
+                    f"{base_row.get('decode_tok_rate', 0.0):.1f} -> "
+                    f"{cur_row['decode_tok_rate']:.1f} tok/s, drafted: "
+                    f"{base_row.get('drafted', 0)} -> "
+                    f"{cur_row.get('drafted', 0)}, accepted: "
+                    f"{base_row.get('accepted', 0)} -> "
+                    f"{cur_row.get('accepted', 0)}, spec_rounds: "
+                    f"{base_row.get('spec_rounds', 0)} -> "
+                    f"{cur_row.get('spec_rounds', 0)}")
             # SLO-class telemetry (slo regime only): per-class tails and
             # preemption counts are informational here — the structural
             # claims below are what enforce the interactive win and the
@@ -193,6 +208,24 @@ def compare(current: dict, baseline: dict, tol: float):
                 f"{s_on['batch_throughput']:.3f} qps fell below "
                 f"{SLO_BATCH_FLOOR:.0%} of class-blind "
                 f"{s_off['batch_throughput']:.3f} qps")
+    # speculative decoding earns its keep on the decode-heavy specdec
+    # regime: hero+spec must actually draft candidates, and its decode
+    # token-rate must strictly beat the same adaptive scheduler with
+    # speculation off (same traffic, same policy, no draft pairs)
+    spd = cur_regimes.get("specdec", {})
+    sp_on, sp_off = spd.get("hero+spec"), spd.get("hero+adaptive")
+    if sp_on and sp_off:
+        if not sp_on.get("drafted"):
+            regressions.append(
+                "specdec: hero+spec drafted zero candidate tokens on the "
+                "decode-heavy regime — the case speculation exists for")
+        if sp_on.get("decode_tok_rate", 0.0) <= \
+                sp_off.get("decode_tok_rate", 0.0):
+            regressions.append(
+                f"specdec: hero+spec decode token-rate "
+                f"{sp_on.get('decode_tok_rate', 0.0):.1f} tok/s no longer "
+                f"beats spec-off hero+adaptive "
+                f"{sp_off.get('decode_tok_rate', 0.0):.1f} tok/s")
     pfc = pre.get("hero+prefetch")
     if pfc and pages:
         if not pfc.get("kv_prefetches"):

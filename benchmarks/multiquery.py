@@ -153,6 +153,20 @@ SLO_VARIANTS = (
                                 preempt=True, slo_admission=True)),
 )
 
+# the specdec regime's variant set: fixed caps (the anchor), the
+# adaptive policy with speculation OFF (the comparator the structural
+# claim is judged against — same traffic, same policy, no draft pairs),
+# and the adaptive policy with scheduler-visible speculative decoding:
+# every decode round may dispatch as a coupled (draft, verify) pair the
+# Eq. 4 mapper can split across PUs
+SPEC_VARIANTS = (
+    ("hero+decode_batch", SessionOptions(coalesce=True)),
+    ("hero+adaptive", SessionOptions(coalesce=True,
+                                     batch_policy="adaptive")),
+    ("hero+spec", SessionOptions(coalesce=True, batch_policy="adaptive",
+                                 spec_decode=True)),
+)
+
 # batch-class throughput floor for the slo regime's structural claim:
 # hero+slo may trade batch completion for interactive p99, but never
 # below this fraction of the class-blind comparator's batch throughput
@@ -165,7 +179,8 @@ def _hist(d: dict) -> str:
 
 
 def _variant_metrics(world, means, traces, wfs, inter_arrival, opts,
-                     slo_mix: bool = False) -> dict:
+                     slo_mix: bool = False,
+                     spec_cols: bool = False) -> dict:
     k = len(traces)
     sess = HeroSession(world=world, family="qwen3", strategy="hero",
                        means=means, options=opts)
@@ -225,6 +240,23 @@ def _variant_metrics(world, means, traces, wfs, inter_arrival, opts,
             int_p50=_pct(ints, 50), int_p99=_pct(ints, 99),
             batch_p50=_pct(bats, 50), batch_p99=_pct(bats, 99),
             batch_throughput=len(bats) / max(batch_total, 1e-9))
+    if spec_cols:
+        from repro.api import builtin_spec
+        # decode tokens the workload demands (identical for every variant
+        # of a regime — the denominator that makes token-rate comparable):
+        # the sum of stream_decode workloads over each query's DAG
+        dec_tok = 0
+        for qi, tr in enumerate(traces):
+            d = builtin_spec(wfs[qi % len(wfs)]).build_dag(tr)
+            dec_tok += sum(n.workload for n in d.nodes.values()
+                           if n.kind == "stream_decode")
+        row.update(
+            decode_tokens=int(dec_tok),
+            decode_tok_rate=dec_tok / row["total"],
+            drafted=int(sess.last_run.drafted_tokens),
+            accepted=int(sess.last_run.accepted_tokens),
+            spec_rounds=int(sess.last_run.spec_rounds),
+            spec_widths=dict(batching.get("spec_width", {})))
     return row
 
 
@@ -266,6 +298,15 @@ SERVING_REGIMES = {
     # and batch throughput are reported per cell
     "slo": dict(k=10, wfs=(1, 3), inter_arrival=0.5, slo_mix=True,
                 variants=SLO_VARIANTS),
+    # speculative-decoding regime: a decode-heavy W1 mix (answers
+    # stretched so token generation dominates the makespan) under
+    # spaced arrivals that leave a PU free for the draft stream — the
+    # case spec decoding exists for: the small draft streams candidates
+    # on a spare PU while the target verifies a whole group per weight
+    # sweep.  Per-cell decode token-rate plus drafted/accepted totals
+    # and the chosen draft widths are reported
+    "specdec": dict(k=8, wfs=(1,), inter_arrival=2.0, answer_scale=6,
+                    spec_cols=True, variants=SPEC_VARIANTS),
 }
 
 # the mixed regime's --arrival-sweep grid (inter-arrival seconds); the
@@ -329,6 +370,7 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
         cells = out[regime] = {}
         wfs = cfg["wfs"]
         slo_mix = bool(cfg.get("slo_mix"))
+        spec_cols = bool(cfg.get("spec_cols"))
         csv(f"# regime={regime} (k={cfg['k']}, "
             f"wf={'+'.join(f'w{w}' for w in wfs)}, "
             f"inter_arrival={cfg['inter_arrival']}s)")
@@ -336,11 +378,13 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
             "decode_rounds,kv_migrations,kv_gb,page_hits,hit_tok,"
             "prefetches,prefetch_hits,widths,groups"
             + (",int_p50_s,int_p99_s,batch_p50_s,batch_p99_s,"
-               "batch_qps,preemptions" if slo_mix else ""))
+               "batch_qps,preemptions" if slo_mix else "")
+            + (",decode_tok_s,drafted,accepted,spec_widths"
+               if spec_cols else ""))
         for label, opts in cfg.get("variants", variants):
             row = cells[label] = _variant_metrics(
                 world, means, traces, wfs, cfg["inter_arrival"], opts,
-                slo_mix=slo_mix)
+                slo_mix=slo_mix, spec_cols=spec_cols)
             csv(f"{world},{label},{row['total']:.2f},{row['p50']:.2f},"
                 f"{row['p99']:.2f},{row['throughput']:.3f},"
                 f"{row['decode_rounds']},{row['kv_migrations']},"
@@ -351,7 +395,10 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 + (f",{row['int_p50']:.2f},{row['int_p99']:.2f},"
                    f"{row['batch_p50']:.2f},{row['batch_p99']:.2f},"
                    f"{row['batch_throughput']:.3f},{row['preemptions']}"
-                   if slo_mix else ""))
+                   if slo_mix else "")
+                + (f",{row['decode_tok_rate']:.1f},{row['drafted']},"
+                   f"{row['accepted']},{_hist(row['spec_widths'])}"
+                   if spec_cols else ""))
         kvm, kvc = cells.get("hero+kv"), cells.get("hero+kv-const")
         if kvm and kvc:
             csv(f"# {world}/{regime}: modeled migration pricing p99 "
@@ -374,6 +421,18 @@ def serving_metrics(world: str = "sd8gen4", dataset: str = "hotpotqa",
                 f"{pre_['kv_prefetch_hits']} pages found resident at "
                 "gather; overlap credit hides the spill fetch, so the "
                 "delta is bounded by the tier traffic the run paid)")
+        sp_on = cells.get("hero+spec")
+        sp_off = cells.get("hero+adaptive") if spec_cols else None
+        if sp_on and sp_off:
+            rate = (sp_on["accepted"] / sp_on["drafted"]
+                    if sp_on["drafted"] else 0.0)
+            csv(f"# {world}/{regime}: speculative decoding token-rate "
+                f"{sp_off['decode_tok_rate']:.1f} -> "
+                f"{sp_on['decode_tok_rate']:.1f} tok/s "
+                f"({sp_on['spec_rounds']} spec rounds, "
+                f"{sp_on['drafted']} drafted / {sp_on['accepted']} "
+                f"accepted, rate {rate:.2f}, widths "
+                f"{_hist(sp_on['spec_widths'])})")
         son, soff = cells.get("hero+slo"), cells.get("hero+adaptive")
         if son and soff and slo_mix:
             csv(f"# {world}/{regime}: class-aware scheduling interactive "
@@ -436,7 +495,8 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
         fixed = row["hero+decode_batch"]["p99"]
         for label in ("hero", "hero+decode_batch", "hero+adaptive",
                       "hero+adaptive-q", "hero+kv-const", "hero+kv",
-                      "hero+pages", "hero+prefetch", "hero+slo"):
+                      "hero+pages", "hero+prefetch", "hero+slo",
+                      "hero+spec"):
             if label not in row:   # per-regime variant sets differ
                 continue
             p99 = row[label]["p99"]
@@ -495,6 +555,21 @@ def serving_ablation(csv=print, world: str = "sd8gen4",
                 f"{s_on['batch_throughput']:.3f} qps fell below "
                 f"{SLO_BATCH_FLOOR:.0%} of class-blind "
                 f"{s_off['batch_throughput']:.3f} qps")
+    # the speculative-decoding cell: hero+spec must actually draft, and
+    # its decode token-rate must strictly beat the same adaptive
+    # scheduler with speculation off on the decode-heavy regime
+    spd = cells.get("specdec", {})
+    sp_on, sp_off = spd.get("hero+spec"), spd.get("hero+adaptive")
+    if sp_on and sp_off:
+        if not sp_on["drafted"]:
+            violations.append(
+                "specdec: hero+spec drafted zero candidate tokens — the "
+                "decode-heavy regime speculation exists for")
+        if sp_on["decode_tok_rate"] <= sp_off["decode_tok_rate"]:
+            violations.append(
+                f"specdec: hero+spec decode token-rate "
+                f"{sp_on['decode_tok_rate']:.1f} tok/s no longer beats "
+                f"spec-off {sp_off['decode_tok_rate']:.1f} tok/s")
     for v in violations:
         csv(f"# ABLATION GATE: {v}")
     if not violations:

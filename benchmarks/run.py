@@ -67,6 +67,8 @@ def main() -> None:
          multiquery.serving_metrics, {}),
         ("Serving_prefix_cache (paged-KV bench-smoke leg)",
          multiquery.serving_metrics, {"regimes": ("prefix",)}),
+        ("Serving_spec_decode (specdec bench-smoke leg)",
+         multiquery.serving_metrics, {"regimes": ("specdec",)}),
         ("Serving-ablation_adaptive_vs_fixed_caps (CI gate)",
          multiquery.serving_ablation, {}),
         ("Kernel_microbench", kernels_bench.run, {}),

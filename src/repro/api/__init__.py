@@ -13,5 +13,5 @@ from repro.api.options import SessionOptions  # noqa: F401
 from repro.api.results import QueryResult, collect_results  # noqa: F401
 from repro.api.session import HeroSession, QueryHandle, make_world  # noqa: F401
 from repro.api.spec import (  # noqa: F401
-    BranchGroup, BranchStage, CollectorSpec, StageSpec, WorkflowSpec,
-    builtin_spec)
+    BranchGroup, BranchStage, CollectorSpec, DecodeSpec, StageSpec,
+    WorkflowSpec, builtin_spec)

@@ -74,6 +74,14 @@ class BackendRun:
     # events on both substrates, so per-query payload-attributed counts
     # sum to this total
     preemptions: int = 0
+    # speculative-decoding totals (scheduler's SpecTracker; zero unless
+    # ``spec_decode`` is on): draft candidates proposed, candidates the
+    # target accepted, and the decode rounds that ran speculatively.
+    # Read identically from both substrates, and per-query
+    # payload-attributed counts sum to these totals
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    spec_rounds: int = 0
 
 
 class Backend(Protocol):
@@ -111,6 +119,7 @@ class SimBackend:
                         fail_prob=self.fail_prob, seed=self.seed,
                         observer=observer)
         res = sim.run(dag, max_time=timeout)
+        spec = getattr(scheduler, "spec", None)
         # count timeline events (fused dispatches fan out to member
         # events), the same convention LiveBackend uses — run-level
         # counters must be backend-independent
@@ -144,7 +153,11 @@ class SimBackend:
                           kv_prefetch_hits=getattr(scheduler.kv,
                                                    "prefetch_hits", 0),
                           preemptions=sum(1 for e in res.timeline
-                                          if e[1] == "preempt"))
+                                          if e[1] == "preempt"),
+                          drafted_tokens=getattr(spec, "drafted_tokens", 0),
+                          accepted_tokens=getattr(spec,
+                                                  "accepted_tokens", 0),
+                          spec_rounds=getattr(spec, "rounds", 0))
 
 
 def _instant_fn(node: Node, batch: int):
@@ -206,6 +219,7 @@ class LiveBackend:
             for ex in executors.values():
                 ex.shutdown()
         events = list(rt.events)
+        spec = getattr(scheduler, "spec", None)
         pu_busy: Dict[str, float] = {}
         for n in dag.nodes.values():
             if "coalesced" in n.payload:
@@ -233,4 +247,7 @@ class LiveBackend:
             kv_prefetches=getattr(scheduler.kv, "prefetches", 0),
             kv_prefetch_bytes=getattr(scheduler.kv, "prefetch_bytes", 0.0),
             kv_prefetch_hits=getattr(scheduler.kv, "prefetch_hits", 0),
-            preemptions=sum(1 for e in events if e[1] == "preempt"))
+            preemptions=sum(1 for e in events if e[1] == "preempt"),
+            drafted_tokens=getattr(spec, "drafted_tokens", 0),
+            accepted_tokens=getattr(spec, "accepted_tokens", 0),
+            spec_rounds=getattr(spec, "rounds", 0))

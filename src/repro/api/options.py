@@ -60,6 +60,13 @@ class SessionOptions:
     # Eq. 5 gate's batched-mode stand-down, batch queries defer while
     # interactive work waits and the throughput floor holds
     slo_admission: bool = False
+    # speculative decoding: decode rounds may dispatch as coupled
+    # (draft, verify) pairs the mapper can place on different PUs
+    # (requires coalesce — speculation rides continuous decode rounds)
+    spec_decode: bool = False
+    # draft-model registry key (rag.stages.DRAFT_MODELS) for spec_decode;
+    # None keeps the catalog default the stage set was built with
+    draft_model: Optional[str] = None
     # escape hatch: raw SchedulerConfig field overrides for knobs with no
     # typed surface (keys validated at construction)
     cfg_overrides: Optional[Mapping[str, Any]] = None
@@ -89,6 +96,22 @@ class SessionOptions:
                              "(preemption splits fused cross-query "
                              "dispatches, which only exist under "
                              "coalescing)")
+        if eff["spec_decode"] and not (eff["coalesce"]
+                                       and ov.get("decode_batch", True)):
+            raise ValueError("spec_decode=True requires coalesce=True with "
+                             "decode_batch on (speculative draft/verify "
+                             "pairs ride continuous decode rounds, which "
+                             "only exist under multi-query coalescing)")
+        if eff["draft_model"] is not None:
+            if not eff["spec_decode"]:
+                raise ValueError("draft_model is only meaningful with "
+                                 "spec_decode=True")
+            from repro.rag.stages import DRAFT_MODELS
+            if eff["draft_model"] not in DRAFT_MODELS:
+                raise ValueError(
+                    f"draft_model {eff['draft_model']!r} is not an "
+                    f"in-tree draft family; pick from "
+                    f"{sorted(DRAFT_MODELS)}")
 
     def scheduler_overrides(self) -> Dict[str, Any]:
         """The ``SchedulerConfig`` patch this options object denotes:

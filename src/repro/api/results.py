@@ -60,6 +60,14 @@ class QueryResult:
     # dispatch (boundary splits; sums to BackendRun.preemptions across
     # queries on either backend)
     preemptions: int = 0
+    # speculative decoding (zero unless ``spec_decode`` is on): draft
+    # candidate tokens proposed for this query's decode streams, how many
+    # the target model accepted, and the resulting per-query accept rate.
+    # Payload-attributed per member at round boundaries, so per-query
+    # counts sum to the BackendRun totals on either backend
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    accept_rate: Optional[float] = None
     # the query was withdrawn via QueryHandle.cancel() mid-run (metrics
     # cover only the work that completed before the cancel took effect)
     cancelled: bool = False
@@ -84,6 +92,7 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         finish = h.arrival_time
         coalesced = rounds = kv_migs = page_hits = hit_tokens = 0
         hit_declined = prefetches = prefetch_hits = preempts = 0
+        drafted = accepted = 0
         kv_bytes = prefetch_bytes = 0.0
         for n in nodes:
             # preemption releases survive even on nodes a later cancel
@@ -99,6 +108,8 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             prefetches += n.payload.get("kv_prefetches", 0)
             prefetch_bytes += n.payload.get("kv_prefetch_bytes", 0.0)
             prefetch_hits += n.payload.get("kv_prefetch_hits", 0)
+            drafted += n.payload.get("spec_drafted", 0)
+            accepted += n.payload.get("spec_accepted", 0)
             dur = n.finish - n.start
             # stage latency is wall time in the stage; PU busy is charged
             # by workload share when the node rode a fused (coalesced)
@@ -149,7 +160,10 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             slo_class=getattr(h, "slo", "interactive"),
             deadline=getattr(h, "deadline", None),
             preemptions=preempts,
+            drafted_tokens=drafted, accepted_tokens=accepted,
             cancelled=bool(getattr(h, "cancelled", False)))
+        if drafted > 0:
+            res.accept_rate = accepted / drafted
         if res.deadline is not None:
             res.deadline_met = res.makespan <= res.deadline
         h.result = res

@@ -152,9 +152,22 @@ class HeroSession:
                 f"options=SessionOptions(...) instead",
                 DeprecationWarning, stacklevel=2)
             if options is not None:
-                raise ValueError("pass options= OR the deprecated per-knob "
-                                 "kwargs, not both")
-            options = SessionOptions(**legacy)
+                # a kwarg repeating the options= value is merely redundant
+                # (ported callers that still forward their old kwargs keep
+                # working); a *disagreeing* kwarg is ambiguous and raises
+                conflicts = sorted(k for k, v in legacy.items()
+                                   if getattr(options, k) != v)
+                if conflicts:
+                    raise ValueError(
+                        f"deprecated kwargs {conflicts} conflict with the "
+                        f"values in options=; pass options= OR the "
+                        f"per-knob kwargs, not both")
+                warnings.warn(
+                    f"kwargs {sorted(legacy)} are redundant: options= "
+                    f"already carries the same values",
+                    DeprecationWarning, stacklevel=2)
+            else:
+                options = SessionOptions(**legacy)
         self.options = options if options is not None else SessionOptions()
         self.cfg_overrides = self.options.scheduler_overrides()
         self.fine_grained = fine_grained

@@ -34,6 +34,7 @@ exactly once.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
@@ -75,6 +76,49 @@ class View:
 
 
 @dataclass(frozen=True)
+class DecodeSpec:
+    """Typed decode-side configuration of one :class:`StageSpec`.
+
+    Collapses the stringly decode knobs into one validated object:
+
+    - ``kv_stage``: the decode stage whose profiled KV shape denominates
+      this stage's cache pages — what the deprecated ``StageSpec.kv_stage``
+      kwarg used to stamp as raw ``payload["kv_decode_stage"]``.  Custom
+      specs whose stage names do not follow the ``*_prefill``/``*_decode``
+      convention MUST set it (see :func:`repro.core.kv_pages.decode_stage_for`).
+    - ``draft_model``: the in-tree draft family allowed to speculate for
+      this decode stage (validated against ``rag.stages.DRAFT_MODELS``).
+      When the session-level draft differs, speculation is disabled for
+      this stage rather than run under the wrong draft.
+    - ``draft_width``: per-stage draft-width pin.  The scheduler snaps it
+      to the profiled width grid and skips the batch policy's candidate
+      search for this stage.
+
+    ``build_dag`` stamps the validated object as ``payload["decode_spec"]``;
+    the paged-KV tracker and the scheduler consume it typed-first, keeping
+    the legacy ``kv_decode_stage`` payload key as a fallback for
+    hand-built nodes.
+    """
+
+    kv_stage: Optional[str] = None
+    draft_model: Optional[str] = None
+    draft_width: Optional[int] = None
+
+    def __post_init__(self):
+        if self.draft_width is not None and self.draft_width < 1:
+            raise ValueError(
+                f"DecodeSpec.draft_width must be >= 1, got "
+                f"{self.draft_width!r}")
+        if self.draft_model is not None:
+            from repro.rag.stages import DRAFT_MODELS
+            if self.draft_model not in DRAFT_MODELS:
+                raise ValueError(
+                    f"DecodeSpec.draft_model {self.draft_model!r} is not "
+                    f"an in-tree draft family; pick from "
+                    f"{sorted(DRAFT_MODELS)}")
+
+
+@dataclass(frozen=True)
 class StageSpec:
     """One statically-known stage."""
 
@@ -96,13 +140,31 @@ class StageSpec:
     # Stamped as payload["prefix_segments"] when the trace carries
     # chunk_ids; the paged-KV prefix cache keys page hashes off it
     shared_ctx: Optional[Workload] = None
-    # explicit decode stage whose profiled KV shape denominates this
-    # stage's cache pages.  The paged-KV tracker otherwise guesses by the
-    # ``*_prefill`` → ``*_decode`` naming convention — custom specs whose
-    # stage names do not follow it MUST set this, or their prefix-cached
-    # prefills are detected at build time and warned-and-skipped instead
-    # of silently paged under the wrong profiled shape
+    # typed decode-side configuration: KV-shape override + speculative
+    # draft placement (model / width pins).  See :class:`DecodeSpec`
+    decode: Optional[DecodeSpec] = None
+    # DEPRECATED: pass ``decode=DecodeSpec(kv_stage=...)`` instead.  Kept
+    # as a shim that folds into ``decode`` with a DeprecationWarning
     kv_stage: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kv_stage is None:
+            return
+        warnings.warn(
+            "StageSpec.kv_stage is deprecated; pass "
+            "decode=DecodeSpec(kv_stage=...) instead",
+            DeprecationWarning, stacklevel=3)
+        dec = self.decode
+        if dec is None:
+            dec = DecodeSpec(kv_stage=self.kv_stage)
+        elif dec.kv_stage is None:
+            dec = dataclasses.replace(dec, kv_stage=self.kv_stage)
+        elif dec.kv_stage != self.kv_stage:
+            raise ValueError(
+                f"StageSpec {self.id!r}: deprecated kv_stage="
+                f"{self.kv_stage!r} conflicts with decode.kv_stage="
+                f"{dec.kv_stage!r}")
+        object.__setattr__(self, "decode", dec)
 
     @property
     def tid(self) -> str:
@@ -227,17 +289,18 @@ class WorkflowSpec:
             return max(int(fn(v)), 1)
 
         def add(d, nid, stage, kind, workload, deps, template,
-                coalescable=True, shared_ctx=0, kv_stage=None):
+                coalescable=True, shared_ctx=0, decode=None):
             n = d.add(Node(id=nid, stage=stage, kind=kind,
                            workload=max(int(workload), 1),
                            deps=set(deps), template=template))
             if not coalescable:
                 n.payload["no_coalesce"] = True
-            if kv_stage is not None:
-                # explicit KV-shape override (StageSpec.kv_stage): the
-                # paged tracker reads this instead of guessing by the
-                # *_prefill/*_decode naming convention
-                n.payload["kv_decode_stage"] = kv_stage
+            if decode is not None:
+                # typed decode-side config (DecodeSpec): the paged tracker
+                # reads its kv_stage instead of guessing by the
+                # *_prefill/*_decode naming convention; the scheduler reads
+                # its draft_model / draft_width pins for spec decoding
+                n.payload["decode_spec"] = decode
             if kind == "stream_decode":
                 # base KV context the stream inherits from its prefill
                 # deps — what KV-residency tracking charges before any
@@ -252,7 +315,8 @@ class WorkflowSpec:
                         # cache they fill (paged-KV page adoption)
                         d.nodes[dep].payload["kv_stream"] = n.id
             elif kind == "stream_prefill" and shared_ctx > 0:
-                if kv_stage is None and not stage.endswith("_prefill"):
+                kvs = decode.kv_stage if decode is not None else None
+                if kvs is None and not stage.endswith("_prefill"):
                     # the convention trap, caught at build time: without
                     # an override the tracker would page this prefill's
                     # cache under a guessed (wrong) decode shape — warn
@@ -333,7 +397,7 @@ class WorkflowSpec:
                 template=s.tid, coalescable=s.coalescable,
                 shared_ctx=(int(s.shared_ctx(v))
                             if s.shared_ctx is not None else 0),
-                kv_stage=s.kv_stage)
+                decode=s.decode)
             if col is not None and s.id == col.base_dep:
                 # base-branch refine; its chat piece is the chain head (it
                 # carries the query tokens), not an add_chat_piece link

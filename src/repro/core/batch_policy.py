@@ -177,6 +177,22 @@ class FixedBatchPolicy:
         PR 3 scoring (the dispatch itself still serves one group)."""
         return ceil_passes(node.workload, batch)
 
+    # -- speculative decoding ----------------------------------------------
+    def spec_width_candidates(self, draft_stage: str, verify_stage: str,
+                              draft_pu: str, verify_pu: str,
+                              alpha: float) -> Sequence[int]:
+        """Draft widths the scheduler's speculative plan enumerates for a
+        (draft, verify) PU pair.  Fixed policy: the single configured
+        width, snapped to the profiled grid (nearest below, else the
+        grid floor) so the pair lookup is exact."""
+        w = max(int(self.cfg.spec_draft_width), 1)
+        grid = self.perf.spec_width_grid(draft_stage, verify_stage,
+                                         draft_pu, verify_pu)
+        if not grid:
+            return (w,)
+        below = [g for g in grid if g <= w]
+        return (below[-1] if below else grid[0],)
+
 
 class AdaptiveBatchPolicy(FixedBatchPolicy):
     """Caps/windows/groups derived online from the profiled grids."""
@@ -192,6 +208,8 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
         # tables are static, so everything except the tau comparison is
         # derived once — decode_width_cap runs in the scheduler hot loop
         self._width_cache: Dict[Tuple[str, str], tuple] = {}
+        # (pair, alpha-bucket) -> ranked draft widths (hot-loop cache)
+        self._spec_cache: Dict[tuple, Sequence[int]] = {}
 
     # -- anchors -----------------------------------------------------------
     def _anchor_pu(self, stage: str, probe_batch: int = 16) -> Optional[str]:
@@ -383,6 +401,46 @@ class AdaptiveBatchPolicy(FixedBatchPolicy):
             k = min(int(self.ROUND_QUANTILE * len(passes)), len(passes) - 1)
             return float(passes[k])
         return sum(passes) / len(passes)
+
+    # -- speculative decoding ----------------------------------------------
+    # widths tried per (pair, alpha-bucket): the top of the accept-rate-
+    # aware effective-throughput ranking over the profiled grid
+    SPEC_TOP_WIDTHS = 2
+    # alpha is bucketed for the cache key: the ranking is a step function
+    # of alpha, so a coarse quantization keeps the hot loop table-driven
+    SPEC_ALPHA_BUCKETS = 20
+
+    def spec_width_candidates(self, draft_stage: str, verify_stage: str,
+                              draft_pu: str, verify_pu: str,
+                              alpha: float) -> Sequence[int]:
+        """The (draft_width, verify_group) dual of the adaptive width
+        cap: rank the profiled draft-width grid by accept-rate-aware
+        effective throughput ``(1 + alpha·w) / cost(w)`` — cost pipelined
+        (max) cross-PU, serialized (sum) on a shared PU — and enumerate
+        the top few, letting Eq. 3's scoring pick between them per token
+        group.  Falls back to the fixed policy's single width when the
+        pair was never profiled."""
+        a = max(min(float(alpha), 1.0), 0.0)
+        bucket = int(a * self.SPEC_ALPHA_BUCKETS)
+        key = (draft_stage, verify_stage, draft_pu, verify_pu, bucket)
+        cached = self._spec_cache.get(key)
+        if cached is not None:
+            return cached
+        grid = self.perf.spec_width_grid(draft_stage, verify_stage,
+                                         draft_pu, verify_pu)
+        if not grid:
+            out = FixedBatchPolicy.spec_width_candidates(
+                self, draft_stage, verify_stage, draft_pu, verify_pu, a)
+            self._spec_cache[key] = out
+            return out
+        a_mid = (bucket + 0.5) / self.SPEC_ALPHA_BUCKETS
+        ranked = sorted(
+            grid, key=lambda w: -(self.perf.spec_throughput(
+                draft_stage, verify_stage, draft_pu, verify_pu, w, a_mid)
+                or 0.0))
+        out = tuple(sorted(ranked[:self.SPEC_TOP_WIDTHS]))
+        self._spec_cache[key] = out
+        return out
 
     @staticmethod
     def _remainders(node: Node) -> Optional[List[int]]:

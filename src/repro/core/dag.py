@@ -72,6 +72,11 @@ class DynamicDAG:
         # boundaries report served tokens / leaves to it, and fuse_decode
         # consults it to anchor rounds with conflicting batch_pu history
         self.kv = None
+        # speculative-decoding accept tracker (core/spec_decode.py),
+        # attached by the scheduler when SchedulerConfig.spec_decode is
+        # on: round boundaries report per-member drafted/accepted counts
+        # so the next round's pricing sees each stream's observed alpha
+        self.spec = None
         # count of cancel-requested, not-yet-finalized nodes: backends
         # skip the reap scan entirely while it is zero (the hot-path
         # guard that keeps cancellation free when unused)
@@ -158,6 +163,7 @@ class DynamicDAG:
             n.expander = None
         if (self.kv is not None and n.kind == "stream_decode"
                 and not n.payload.get("decode_round")
+                and not n.payload.get("draft_round")
                 and "members" not in n.payload):
             # a finished decode piece with no continuation (no rest
             # sibling of the same stream) ends its stream: free the KV
@@ -169,7 +175,9 @@ class DynamicDAG:
                 self.kv.on_boundary(n, "", 0, left=True)
         for s in self._succ.get(nid, ()):
             self._refresh_status(self.nodes[s])
-        if n.payload.get("decode_round") and not self._succ.get(nid):
+        if ((n.payload.get("decode_round")
+             or n.payload.get("draft_round"))
+                and not self._succ.get(nid)):
             # a completed round nobody depends on (progressive spawns may
             # anchor on it) would otherwise accumulate one node per
             # token-group boundary, making every scheduler pass scan an
@@ -228,6 +236,15 @@ class DynamicDAG:
         members = n.payload["members"]
         dur = (t - n.start) if n.start >= 0 else 0.0
         total = sum(min(g, m.workload) for m in members)
+        # speculative round: the same boundary served the same tokens, but
+        # in spec_passes verify sweeps of drafted groups.  Per member the
+        # round drafted passes × width candidates; accepted counts come
+        # from the backend's scoreboard (payload["spec_accepts"], live
+        # stage fns) or fall back to the pass arithmetic — s tokens in
+        # spec_passes sweeps means s − passes drafts were accepted.
+        spec_w = n.payload.get("spec_width", 0)
+        spec_n = max(int(n.payload.get("spec_passes", 1)), 1)
+        acc_map = n.payload.get("spec_accepts") or {}
         for m in members:
             s = min(g, m.workload)
             m.payload.pop("fused_into", None)
@@ -235,12 +252,35 @@ class DynamicDAG:
             m.payload["last_slice"] = s
             m.payload["decode_rounds"] = m.payload.get("decode_rounds", 0) + 1
             m.payload["decode_served"] = m.payload.get("decode_served", 0) + s
+            if spec_w:
+                drafted = spec_n * spec_w
+                acc = acc_map.get(m.id)
+                if acc is None:
+                    acc = s - spec_n
+                acc = max(0, min(int(acc), drafted))
+                m.payload["spec_drafted"] = (
+                    m.payload.get("spec_drafted", 0) + drafted)
+                m.payload["spec_accepted"] = (
+                    m.payload.get("spec_accepted", 0) + acc)
+                if self.spec is not None:
+                    self.spec.observe(m.group or m.id, drafted, acc)
             if self.kv is not None:
                 if n.config is not None:
                     # residency boundary event: the member's cache grew by
                     # the served slice on the round's PU; leavers free theirs
                     self.kv.on_boundary(m, n.config[0], s,
                                         left=(s >= m.workload))
+                    if (spec_w and s < m.workload
+                            and getattr(self.kv, "paged", False)):
+                        # draft KV: a staying member's draft-model cache
+                        # mirrors its (just-grown) verify context —
+                        # growing forward or trimming the rejected
+                        # speculative tail back to it, never below, so
+                        # rollback cannot cross a served-page boundary.
+                        # Leavers skip: release() frees both footprints.
+                        self.kv.spec_draft_sync(
+                            m, n.payload.get("spec_draft_stage"),
+                            n.payload.get("spec_draft_pu") or n.config[0])
                 elif s >= m.workload:
                     # a leaver of an un-configured round (e.g. drained
                     # without a dispatch) must still release its stream, or

@@ -67,6 +67,9 @@ from repro.core.kv_residency import _kv_members, stream_key
 from repro.core.perf_model import LinearPerfModel
 
 DRAM, DISK = "dram", "disk"
+# stream-key suffix of a speculative draft-model cache mirror: a second,
+# smaller footprint per decode stream (see spec_draft_sync / release)
+DRAFT_KEY = "#draft"
 
 
 def decode_stage_of(stage: str) -> str:
@@ -79,13 +82,18 @@ def decode_stage_of(stage: str) -> str:
 
 
 def decode_stage_for(n: Node) -> str:
-    """Resolve the decode stage denominating ``n``'s KV pages: an explicit
-    ``StageSpec.kv_stage`` override (stamped as
-    ``payload["kv_decode_stage"]``) wins; otherwise the
-    ``*_prefill``/``*_decode`` naming convention.  Custom specs whose
-    stage names do not follow the convention MUST override — paging a
-    prefill under a guessed decode shape mischarges every byte it
-    touches (the trap the override closes)."""
+    """Resolve the decode stage denominating ``n``'s KV pages: the typed
+    ``DecodeSpec`` stamped by ``spec.build_dag`` (``payload["decode_spec"]
+    .kv_stage``) wins, then the legacy raw ``payload["kv_decode_stage"]``
+    stamp (hand-built nodes), then the ``*_prefill``/``*_decode`` naming
+    convention.  Custom specs whose stage names do not follow the
+    convention MUST override — paging a prefill under a guessed decode
+    shape mischarges every byte it touches (the trap the override
+    closes)."""
+    spec = n.payload.get("decode_spec")
+    kvs = getattr(spec, "kv_stage", None)
+    if kvs:
+        return str(kvs)
     override = n.payload.get("kv_decode_stage")
     if override:
         return str(override)
@@ -144,6 +152,10 @@ class KVPage:
     refs: int = 0              # live streams holding this page (pin)
     last_use: int = 0          # LRU clock
     hits: int = 0              # prefix-cache reuses (frequency weight)
+    # speculative draft-model cache page: never pinned (refs stays 0)
+    # and evicted before ANY non-draft page in the same arena — draft
+    # cache must not push verify pages out
+    draft: bool = False
 
 
 @dataclass
@@ -291,10 +303,15 @@ class PagedKVCache:
                 self.soft_overflows += 1      # all pinned: soft overflow
                 self._events.append(("kv_soft_overflow", node))
                 return
+            # draft pages always go first (the key's leading bool): with
+            # no draft pages present the ordering is exactly the
+            # pre-spec LRU, bit-identical with the mode off
             if self.prefetch_on:
-                pg = min(victims, key=lambda p: (p.hits, p.last_use, p.pid))
+                pg = min(victims, key=lambda p: (not p.draft, p.hits,
+                                                 p.last_use, p.pid))
             else:
-                pg = min(victims, key=lambda p: (p.last_use, p.pid))
+                pg = min(victims, key=lambda p: (not p.draft,
+                                                 p.last_use, p.pid))
             if dst is None:
                 self._free(pg)                # nowhere lower: drop
             else:
@@ -544,25 +561,87 @@ class PagedKVCache:
         reusable by the next query with the same prefix.  Tiers that an
         earlier all-pinned soft overflow left above capacity demote
         their (now unpinned) excess here — the conservation guarantee
-        that every tier returns under capacity once streams release."""
-        st = self._streams.pop(stream_key(m), None)
-        if st is None:
-            return
-        touched: Set[str] = set()
-        for pid in st.pages:
-            pg = self._pages.get(pid)
-            if pg is None:
+        that every tier returns under capacity once streams release.
+        The stream's speculative draft mirror (``<stream>#draft``), when
+        one exists, releases with it — its private draft pages free
+        outright."""
+        for key in (stream_key(m), stream_key(m) + DRAFT_KEY):
+            st = self._streams.pop(key, None)
+            if st is None:
                 continue
-            pg.refs = max(pg.refs - 1, 0)
-            if pg.refs == 0 and pg.hash is None:
-                self._free(pg)
-            elif pg.refs == 0:
-                touched.add(pg.tier)
-        for tier in sorted(touched):
-            if (self._tier_used.get(tier, 0.0) > self._capacity(tier)
-                    and any(self._pages[pid].refs <= 0
-                            for pid in self._tier_pages.get(tier, ()))):
-                self._make_room(tier, 0.0, m)
+            touched: Set[str] = set()
+            for pid in st.pages:
+                pg = self._pages.get(pid)
+                if pg is None:
+                    continue
+                pg.refs = max(pg.refs - 1, 0)
+                if pg.refs == 0 and pg.hash is None:
+                    self._free(pg)
+                elif pg.refs == 0:
+                    touched.add(pg.tier)
+            for tier in sorted(touched):
+                if (self._tier_used.get(tier, 0.0) > self._capacity(tier)
+                        and any(self._pages[pid].refs <= 0
+                                for pid in self._tier_pages.get(tier, ()))):
+                    self._make_room(tier, 0.0, m)
+
+    def spec_draft_sync(self, m: Node, draft_stage: Optional[str],
+                        pu: str) -> None:
+        """Speculative-decoding boundary hook: mirror member ``m``'s
+        draft-model cache — a second, smaller per-stream footprint keyed
+        ``<stream>#draft`` whose pages are flagged ``draft`` and never
+        pinned (``refs`` stays 0), making them the first eviction
+        victims in any arena: draft cache can never push a verify page
+        out.  The mirror grows to the verify stream's served context or
+        trims the rejected speculative tail back down to it — never
+        below, so rollback cannot move a served boundary backwards."""
+        if not draft_stage or draft_stage not in self.perf.kv_bytes:
+            return
+        vst = self._streams.get(stream_key(m))
+        target = vst.ctx_tokens if vst is not None else 0
+        key = stream_key(m) + DRAFT_KEY
+        st = self._streams.get(key)
+        if st is None:
+            if target <= 0:
+                return
+            st = self._streams[key] = PagedStream(stage=draft_stage,
+                                                  pu=pu, ctx_tokens=0)
+        st.pu = pu
+        if target > st.ctx_tokens:
+            left = target - st.ctx_tokens
+            if st.pages:
+                tail = self._pages.get(st.pages[-1])
+                if (tail is not None and tail.tier == pu
+                        and tail.tokens < self.page_tokens):
+                    take = min(self.page_tokens - tail.tokens, left)
+                    self._make_room(pu, take * self.perf.kv_bytes.get(
+                        tail.stage, 0.0), m)
+                    self._grow_page(tail, take)
+                    left -= take
+            while left > 0:
+                take = min(self.page_tokens, left)
+                pg = self._alloc(st.stage, take, pu, None, m)
+                pg.draft = True
+                st.pages.append(pg.pid)
+                left -= take
+        elif target < st.ctx_tokens:
+            need = st.ctx_tokens - target
+            while need > 0 and st.pages:
+                pg = self._pages.get(st.pages[-1])
+                if pg is None:
+                    st.pages.pop()
+                    continue
+                if pg.tokens <= need:
+                    st.pages.pop()
+                    need -= pg.tokens
+                    self._free(pg)
+                else:
+                    by = need * self.perf.kv_bytes.get(pg.stage, 0.0)
+                    pg.tokens -= need
+                    self._tier_used[pg.tier] = (
+                        self._tier_used.get(pg.tier, 0.0) - by)
+                    need = 0
+        st.ctx_tokens = target
 
     # -- prefix cache --------------------------------------------------------
     def apply_prefix_hits(self, n: Node) -> None:

@@ -368,6 +368,33 @@ class GroundTruthPerf:
         bw = self.soc.disk_bw or 0.05 * self.soc.dram_bw
         return by / bw
 
+    # -- speculative decoding (draft/verify pairs) ------------------------
+
+    def spec_verify_p0(self, stage: StageModel, pu: PU, draft_width: int,
+                       width: int = 1) -> float:
+        """Base latency of ONE verify pass: the target model scores
+        ``draft_width + 1`` positions per resident sequence in a single
+        weight sweep — the speculative win, since a memory-bound decode
+        otherwise pays one sweep *per token*.  Compute scales with the
+        scored positions and the resident width; bytes do not."""
+        w = max(int(draft_width), 0)
+        rw = max(int(width), 1)
+        by = stage.params * stage.bytes_per_param
+        fl = stage.flops(1, w + 1) * rw
+        weff = _shape_eff(pu, rw) if rw > 1 else 1.0
+        t = max(fl / (pu.peak_flops * pu.eff_stream * weff),
+                by / (pu.mem_bw * pu.mem_eff_stream))
+        return t + pu.overhead + pu.step_overhead
+
+    def spec_accept(self, draft: StageModel, verify: StageModel) -> float:
+        """Ground-truth accept rate of ``draft`` proposing for ``verify``:
+        a smooth deterministic proxy in the capacity ratio (a draft 1/16
+        the size still agrees on most easy tokens — the quarter-power
+        keeps the curve in the empirically reported 0.6–0.9 band),
+        clipped away from the degenerate extremes."""
+        ratio = max(draft.params, 1) / max(verify.params, 1)
+        return float(min(max(ratio ** 0.25, 0.05), 0.95))
+
     def phi(self, stage: StageModel, B: float) -> float:
         """Contention slowdown φ_v(B) ≥ 1 (Eq. 1)."""
         soc = self.soc
@@ -418,6 +445,22 @@ class LinearPerfModel:
         # (0 = unbounded) the page table evicts against
         self.fetch_coef: Dict[Tuple[str, str, str], Tuple[float, float]] = {}
         self.kv_tiers: Dict[str, float] = {}
+        # speculative-decoding profile (spec_decode subsystem):
+        # - spec_table: (verify stage, pu) -> {(draft_width, width):
+        #   (verify-pass p0, verify-pass bandwidth)} — one target sweep
+        #   scoring draft_width+1 positions per resident
+        # - spec_pair: (draft stage, verify stage, draft_pu, verify_pu) ->
+        #   {(draft_width, width): (t_draft, t_verify)} — the coupled
+        #   per-pass pair the effective-throughput term is built from
+        # - spec_accept0: (draft stage, verify stage) -> profiled accept
+        #   rate prior (the EWMA's init before any observed rounds)
+        self.spec_table: Dict[Tuple[str, str],
+                              Dict[Tuple[int, int],
+                                   Tuple[float, float]]] = {}
+        self.spec_pair: Dict[Tuple[str, str, str, str],
+                             Dict[Tuple[int, int],
+                                  Tuple[float, float]]] = {}
+        self.spec_accept0: Dict[Tuple[str, str], float] = {}
 
     @staticmethod
     def _feats(n: np.ndarray, tile: int) -> np.ndarray:
@@ -515,10 +558,53 @@ class LinearPerfModel:
                          if p.kind != "io"}
         self.kv_tiers["dram"] = gt.soc.kv_dram_pool
         self.kv_tiers["disk"] = 0.0
+        # speculative-decoding grid, noiseless and LAST so the rng stream
+        # of every fit above is byte-identical whether or not the stage set
+        # includes draft companions: per verify stage with an in-tree
+        # ``*_draft`` companion, sample one-sweep verify passes and the
+        # coupled (draft, verify) per-pass pair over every supported PU
+        # pair — what spec_throughput prices Eq. 3 candidates with
+        from repro.core.spec_decode import draft_stage_of
+        for sname, stage in gt.stages.items():
+            if stage.kind != "stream_decode":
+                continue
+            dname = draft_stage_of(sname)
+            if dname is None or dname not in gt.stages:
+                continue
+            draft = gt.stages[dname]
+            self.spec_accept0[(dname, sname)] = gt.spec_accept(draft, stage)
+            vpus = [p for p in gt.soc.pus if gt.supported(stage, p)]
+            dpus = [p for p in gt.soc.pus if gt.supported(draft, p)]
+            for vp in vpus:
+                vtab: Dict[Tuple[int, int], Tuple[float, float]] = {}
+                for w in self.SPEC_WIDTHS:
+                    for rw in self.SPEC_RES_WIDTHS:
+                        tv = gt.spec_verify_p0(stage, vp, w, rw)
+                        bv = (stage.params * stage.bytes_per_param
+                              / max(tv, 1e-9))
+                        vtab[(int(w), int(rw))] = (tv, bv)
+                self.spec_table[(sname, vp.name)] = vtab
+            for dp in dpus:
+                for vp in vpus:
+                    ptab: Dict[Tuple[int, int], Tuple[float, float]] = {}
+                    for w in self.SPEC_WIDTHS:
+                        for rw in self.SPEC_RES_WIDTHS:
+                            td = gt.p0(draft, dp,
+                                       Config(dp.name, int(w),
+                                              width=int(rw)))
+                            tv = self.spec_table[(sname, vp.name)][
+                                (int(w), int(rw))][0]
+                            ptab[(int(w), int(rw))] = (td, tv)
+                    self.spec_pair[(dname, sname, dp.name, vp.name)] = ptab
         return self
 
     # context-length grid the migration-cost line is sampled on (tokens)
     MIGRATE_CTX = (256, 1024, 4096, 16384)
+
+    # speculative-decoding grid: draft widths (candidate tokens per verify
+    # pass) × resident widths the coupled pair is sampled on
+    SPEC_WIDTHS = (1, 2, 3, 4, 6, 8)
+    SPEC_RES_WIDTHS = (1, 2, 4, 8)
 
     def migrate_cost(self, stage: str, src_pu: str, dst_pu: str,
                      ctx_tokens: int) -> Optional[float]:
@@ -626,6 +712,15 @@ class LinearPerfModel:
             "fetch_coef": {f"{s}|{a}|{b}": list(v) for (s, a, b), v in
                            self.fetch_coef.items()},
             "kv_tiers": dict(self.kv_tiers),
+            "spec_table": {f"{s}|{p}": {f"{w},{rw}": list(v)
+                                        for (w, rw), v in tab.items()}
+                           for (s, p), tab in self.spec_table.items()},
+            "spec_pair": {f"{d}|{s}|{a}|{b}": {f"{w},{rw}": list(v)
+                                               for (w, rw), v in
+                                               tab.items()}
+                          for (d, s, a, b), tab in self.spec_pair.items()},
+            "spec_accept0": {f"{d}|{s}": v for (d, s), v in
+                             self.spec_accept0.items()},
             "tiles": self._tiles, "b0": self._b0,
         }
         with open(path, "w") as f:
@@ -665,6 +760,18 @@ class LinearPerfModel:
         m.fetch_coef = {tuple(k.split("|")): tuple(v)
                         for k, v in blob.get("fetch_coef", {}).items()}
         m.kv_tiers = dict(blob.get("kv_tiers", {}))
+        # speculative-decoding profile (absent in pre-spec profile files:
+        # the spec queries return None/() and spec scoring is skipped)
+        m.spec_table = {
+            tuple(k.split("|")): {tuple(int(x) for x in wr.split(",")):
+                                  tuple(v) for wr, v in tab.items()}
+            for k, tab in blob.get("spec_table", {}).items()}
+        m.spec_pair = {
+            tuple(k.split("|")): {tuple(int(x) for x in wr.split(",")):
+                                  tuple(v) for wr, v in tab.items()}
+            for k, tab in blob.get("spec_pair", {}).items()}
+        m.spec_accept0 = {tuple(k.split("|")): float(v)
+                          for k, v in blob.get("spec_accept0", {}).items()}
         m._tiles = blob["tiles"]
         m._b0 = blob["b0"]
         return m
@@ -739,6 +846,87 @@ class LinearPerfModel:
         """Profiled token groups of the decode ``(width, group)`` grid."""
         return tuple(sorted({g for (_w, g)
                              in self.decode_table.get((stage, pu), {})}))
+
+    # -- speculative-decoding queries (spec_decode subsystem) -------------
+
+    @staticmethod
+    def _spec_nearest(tab: Dict[Tuple[int, int], Tuple[float, float]],
+                      w: int, rw: int) -> Optional[Tuple[float, float]]:
+        """Exact grid hit, else the nearest profiled (draft_width, width)
+        point — the policy only enumerates grid widths, so off-grid
+        queries are rare corrective paths, not hot ones."""
+        hit = tab.get((int(w), int(rw)))
+        if hit is not None:
+            return hit
+        if not tab:
+            return None
+        key = min(tab, key=lambda k: (abs(k[0] - w) + abs(k[1] - rw),
+                                      k[0], k[1]))
+        return tab[key]
+
+    def spec_verify_p0(self, stage: str, pu: str, draft_width: int,
+                       width: int = 1) -> Optional[float]:
+        """Modeled latency of one verify pass (one target sweep scoring
+        ``draft_width + 1`` positions per resident).  ``None`` when this
+        profile predates the spec grid or the stage has no companion."""
+        hit = self._spec_nearest(self.spec_table.get((stage, pu), {}),
+                                 draft_width, width)
+        return None if hit is None else hit[0]
+
+    def spec_bandwidth(self, stage: str, pu: str, draft_width: int,
+                       width: int = 1) -> Optional[float]:
+        """Shared-domain demand of one verify pass (one weight sweep over
+        the pass time — speculation amortizes bytes over ~1+α·w tokens)."""
+        hit = self._spec_nearest(self.spec_table.get((stage, pu), {}),
+                                 draft_width, width)
+        return None if hit is None else hit[1]
+
+    def spec_pair_time(self, draft_stage: str, verify_stage: str,
+                       draft_pu: str, verify_pu: str, draft_width: int,
+                       width: int = 1
+                       ) -> Optional[Tuple[float, float]]:
+        """``(t_draft, t_verify)`` of one coupled pass on the PU pair
+        (``None`` when the pair was never profiled)."""
+        tab = self.spec_pair.get(
+            (draft_stage, verify_stage, draft_pu, verify_pu))
+        if tab is None:
+            return None
+        return self._spec_nearest(tab, draft_width, width)
+
+    def spec_throughput(self, draft_stage: str, verify_stage: str,
+                        draft_pu: str, verify_pu: str, draft_width: int,
+                        alpha: float, width: int = 1) -> Optional[float]:
+        """Accept-rate-aware effective token rate of the coupled pair:
+        ``width * (1 + α·w) / cost`` tokens/s, where cost is the
+        pipelined ``max(t_draft, t_verify)`` on distinct PUs (draft
+        streams the next candidates while the target verifies the
+        previous group) and the serial sum on a shared PU."""
+        pair = self.spec_pair_time(draft_stage, verify_stage, draft_pu,
+                                   verify_pu, draft_width, width)
+        if pair is None:
+            return None
+        td, tv = pair
+        cost = max(td, tv) if draft_pu != verify_pu else td + tv
+        a = max(min(float(alpha), 1.0), 0.0)
+        w = max(int(draft_width), 0)
+        return max(width, 1) * (1.0 + a * w) / max(cost, 1e-9)
+
+    def spec_width_grid(self, draft_stage: str, verify_stage: str,
+                        draft_pu: str, verify_pu: str) -> Tuple[int, ...]:
+        """Profiled draft widths of the coupled pair (empty when the pair
+        was never profiled — spec scoring then falls back to plain
+        decode)."""
+        tab = self.spec_pair.get(
+            (draft_stage, verify_stage, draft_pu, verify_pu))
+        if not tab:
+            return ()
+        return tuple(sorted({w for (w, _rw) in tab}))
+
+    def spec_accept_init(self, draft_stage: str,
+                         verify_stage: str) -> Optional[float]:
+        """Profiled accept-rate prior for the pair (EWMA init), ``None``
+        for profiles that predate the spec grid."""
+        return self.spec_accept0.get((draft_stage, verify_stage))
 
     def per_item(self, stage: str, pu: str, batch: int) -> float:
         """Per-member latency of one pass at ``batch`` — the curve whose

@@ -36,6 +36,7 @@ from repro.core.kv_residency import KVResidency, _kv_members
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     shape_aware_configs)
 from repro.core.perf_model import LinearPerfModel
+from repro.core.spec_decode import SpecTracker, draft_stage_of, spec_passes
 
 
 @dataclass
@@ -135,6 +136,27 @@ class SchedulerConfig:
     # longer than slo_floor_mult × tau dispatches regardless, so batch
     # throughput degrades boundedly under interactive pressure
     slo_floor_mult: float = 4.0
+    # speculative decoding (core/spec_decode.py): every decode round may
+    # dispatch as a coupled (draft, verify) pair — a small draft model
+    # streams ``w`` candidate tokens per verify pass on a possibly
+    # *different* PU while the target scores the previous group in one
+    # weight sweep, compressing a ``g``-token round into
+    # ceil(g / (1 + alpha·w)) passes at the stream's observed accept
+    # rate.  Rounds only (requires ``coalesce`` + ``decode_batch``);
+    # off = bit-identical to the PR 8 goldens.
+    spec_decode: bool = False
+    # draft-model registry key (rag.stages.DRAFT_MODELS); None keeps the
+    # catalog default the stage set was built with
+    draft_model: Optional[str] = None
+    # draft width w under the fixed batching policy (candidates proposed
+    # per verify pass); the adaptive policy enumerates the profiled
+    # (draft_width, verify_group) grid instead
+    spec_draft_width: int = 4
+    # accept-rate EWMA: prior for never-observed streams (the profiled
+    # pair prior wins when the perf model carries one) and the per-round
+    # fold-in weight
+    spec_accept_init: float = 0.6
+    spec_accept_alpha: float = 0.3
 
 
 @dataclass
@@ -197,6 +219,18 @@ class HeroScheduler:
         # and fused batchable dispatch sizes
         self.policy_log: Dict[str, Dict[int, int]] = {
             "decode_width": {}, "decode_group": {}, "fused_batch": {}}
+        # speculative decoding: online accept-rate tracker — per-stream
+        # EWMA the round pricing consults, plus the run totals both
+        # backends surface (the ``preemptions`` counter-protocol
+        # contract).  The telemetry key is added only when the mode is
+        # on so spec-off bench output stays bit-identical.
+        if self.cfg.spec_decode:
+            self.spec: Optional[SpecTracker] = SpecTracker(
+                init=self.cfg.spec_accept_init,
+                weight=self.cfg.spec_accept_alpha)
+            self.policy_log["spec_width"] = {}
+        else:
+            self.spec = None
 
     # -- elastic PU membership (fault tolerance / scale up-down) -----------
     def add_pu(self, pu: str):
@@ -221,6 +255,10 @@ class HeroScheduler:
         if self.kv is not None and dag.kv is not self.kv:
             # let decode-round boundaries and fuse_decode reach the tracker
             dag.kv = self.kv
+        if self.spec is not None and dag.spec is not self.spec:
+            # boundary accept counts (_finish_decode_round) feed the EWMA
+            # the next round's speculative pricing reads
+            dag.spec = self.spec
         crit.update_criticality(dag, self.perf, self.template, now,
                                 beta=cfgn.beta if cfgn.enable_criticality
                                 else 0.0)                       # line 4
@@ -344,8 +382,37 @@ class HeroScheduler:
                                     batched_mode) \
                 if cfgn.slo_admission else gate_star
 
-            best: Optional[Tuple[float, Dispatch, bool]] = None
+            best: Optional[Tuple[float, Dispatch, bool, Optional[Dict]]] \
+                = None
             capable = self._capable_pus(v_cand, idle + list(busy_until))
+            # speculative decoding precondition for this candidate: a
+            # decode round whose stage has a profiled draft companion.
+            # alpha is the mean tracker estimate over the member streams
+            # (profiled pair prior for never-observed streams).
+            spec_ds: Optional[str] = None
+            spec_alpha = 0.0
+            spec_wpin: Optional[int] = None
+            if self.spec is not None and v_cand.payload.get("decode_round"):
+                ds0 = draft_stage_of(v_cand.stage)
+                mems = v_cand.payload.get("members") or [v_cand]
+                # typed per-stage pins (StageSpec.decode = DecodeSpec):
+                # a stage pinned to a different draft family than the
+                # session's opts out of speculation rather than run under
+                # the wrong draft; a width pin bypasses the policy search
+                dspec = next((m.payload.get("decode_spec") for m in mems
+                              if m.payload.get("decode_spec") is not None),
+                             None)
+                dm = getattr(dspec, "draft_model", None)
+                if dm is not None and self.cfg.draft_model not in (None, dm):
+                    ds0 = None
+                spec_wpin = getattr(dspec, "draft_width", None)
+                prior = (self.perf.spec_accept_init(ds0, v_cand.stage)
+                         if ds0 is not None else None)
+                if prior is not None:
+                    spec_ds = ds0
+                    spec_alpha = sum(
+                        self.spec.alpha(m.group or m.id, prior)
+                        for m in mems) / len(mems)
             # resident decode batch: Eq. 3 enumerates configs at the batch's
             # *current* width, and moving PU pays the KV-migration cost
             width = (v_cand.payload.get("decode_width", 1)
@@ -431,12 +498,21 @@ class HeroScheduler:
                             score += cfgn.decode_migrate_cost
                     d = Dispatch(v_cand, pu, batch, p0, b, mig_s)
                     if best is None or score < best[0]:
-                        best = (score, d, is_idle)
+                        best = (score, d, is_idle, None)
+                    if spec_ds is not None and is_idle:
+                        sp = self._spec_plan(v_cand, spec_ds, spec_alpha,
+                                             pu, batch, width, idle, start,
+                                             B_now, b_active, b_soft,
+                                             gate_v, mig_s, now,
+                                             wpin=spec_wpin)
+                        if sp is not None and (best is None
+                                               or sp[0] < best[0]):
+                            best = (sp[0], sp[1], True, sp[2])
             if best is None or not best[2]:                     # line 15
                 # infeasible now, or better to queue for a busy PU: defer
                 r_tmp.remove(v_cand)
                 continue
-            _, d, _ = best
+            _, d, _, spec_meta = best
             if (cfgn.enable_concurrency and gate_v is not None
                     and gate_v.id != d.node.id
                     and gate_v.config
@@ -461,12 +537,22 @@ class HeroScheduler:
                     continue
             piece = self._take_substage(dag, d.node, d.batch)   # Eq. 3 split
             d = dataclasses.replace(d, node=piece)
+            if spec_meta is not None:
+                self._stamp_spec(piece, spec_meta)
             dag.mark_running(piece.id, now, (d.pu, d.batch))    # line 17
             self._log_choice(piece, d.batch)
             decisions.append(d)
             idle.remove(d.pu)                                   # line 18-19
             passes = ceil_passes(piece.workload, d.batch)
             busy_until[d.pu] = now + passes * d.predicted_p0 + d.migrate_s
+            if spec_meta is not None and spec_meta["dp"] != d.pu:
+                # cross-PU plan: materialize the draft half as its own
+                # dispatch occupying the draft PU for the round
+                dd = self._spawn_draft(dag, piece, spec_meta, now)
+                decisions.append(dd)
+                if dd.pu in idle:
+                    idle.remove(dd.pu)
+                busy_until[dd.pu] = now + spec_meta["n"] * dd.predicted_p0
             r_tmp = [n for n in dag.ready() if n not in
                      [x.node for x in decisions]]
         if (cfgn.kv_prefetch and decisions
@@ -758,6 +844,108 @@ class HeroScheduler:
             return self.cfg.decode_migrate_cost
         return cost
 
+    # -- speculative decoding ----------------------------------------------
+    def _spec_plan(self, node: Node, ds: str, alpha: float, pu: str,
+                   batch: int, width: int, idle: Sequence[str],
+                   start: float, B_now: float, b_active: float,
+                   b_soft: float, gate_v: Optional[Node], mig_s: float,
+                   now: float, wpin: Optional[int] = None
+                   ) -> Optional[Tuple[float, Dispatch, Dict]]:
+        """Best speculative plan for serving round ``node`` on verify PU
+        ``pu`` at token group ``batch``: enumerate (draft PU, draft
+        width) over the profiled pair grid — the draft may pipeline on
+        any other *idle* PU (per-pass cost max(t_d, t_v)) or run
+        serially on the verify PU itself (t_d + t_v) — and gate the
+        coupled pair's *combined* bandwidth through the same Eq. 5
+        budget, so draft traffic can never starve the verify star.
+        Returns (score, verify Dispatch, meta) or None when the grid
+        offers nothing feasible; the caller compares the score against
+        the plain (non-speculative) round candidate."""
+        cfgn = self.cfg
+        vs = node.stage
+        pin = (cfgn.static_map or {}).get(ds)
+        best: Optional[Tuple[float, Dispatch, Dict]] = None
+        for dp in [pu] + [q for q in idle if q != pu]:
+            if dp == "io" or not self.perf.supported(ds, dp):
+                continue
+            if pin is not None and dp != pin:
+                continue
+            if wpin:
+                # typed DecodeSpec.draft_width pin: snap to the profiled
+                # grid (largest fitted width not above the pin) instead
+                # of searching the policy's candidate set
+                grid = self.perf.spec_width_grid(ds, vs, dp, pu)
+                below = [g for g in grid if g <= wpin]
+                cands: Sequence[int] = ((max(below) if below
+                                         else min(grid),) if grid else ())
+            else:
+                cands = self.policy.spec_width_candidates(ds, vs, dp, pu,
+                                                          alpha)
+            for w in cands:
+                pair = self.perf.spec_pair_time(ds, vs, dp, pu, w, width)
+                bv = self.perf.spec_bandwidth(vs, pu, w, width)
+                if pair is None or bv is None:
+                    continue
+                td, tv = pair
+                bd = self.perf.bandwidth_decode(ds, dp, width, w)
+                b_pair = bv + bd
+                if cfgn.enable_concurrency and b_active > 0 and \
+                        cc.violates_budget(b_active, b_pair, b_soft):
+                    continue
+                n_p = spec_passes(batch, w, alpha)
+                cost = max(td, tv) if dp != pu else td + tv
+                phi = self.perf.phi(vs, B_now + b_pair)
+                horizon = self.policy.round_passes(node, batch)
+                f_cand = start + horizon * n_p * cost * phi
+                w_b = cc.contention_penalty(self.perf, gate_v, b_pair,
+                                            B_now, now) \
+                    if cfgn.enable_concurrency else 0.0
+                score = f_cand + cfgn.alpha * w_b + mig_s
+                if best is None or score < best[0]:
+                    # the verify dispatch's ETA is the whole round
+                    # (n passes of the pipelined pair); same-PU plans
+                    # fold the draft's bandwidth into it, cross-PU
+                    # plans give the draft its own dispatch
+                    d = Dispatch(node, pu, batch, n_p * cost,
+                                 b_pair if dp == pu else bv, mig_s)
+                    best = (score, d, {"ds": ds, "dp": dp, "w": w,
+                                       "n": n_p, "td": td, "bd": bd,
+                                       "alpha": alpha})
+        return best
+
+    @staticmethod
+    def _stamp_spec(piece: Node, meta: Dict) -> None:
+        """Commit the chosen speculative plan onto the round's payload —
+        what the backends (ground-truth pass count, draft placement),
+        the boundary bookkeeping (accept counters, draft-KV sync) and
+        the telemetry read."""
+        p = piece.payload
+        p["spec_width"] = meta["w"]
+        p["spec_draft_stage"] = meta["ds"]
+        p["spec_draft_pu"] = meta["dp"]
+        p["spec_passes"] = meta["n"]
+        p["spec_alpha"] = meta["alpha"]
+
+    def _spawn_draft(self, dag: DynamicDAG, piece: Node, meta: Dict,
+                     now: float) -> Dispatch:
+        """Materialize the draft half of a cross-PU speculative round:
+        its own RUNNING node + Dispatch streaming ``n × w`` candidate
+        tokens of the small model on the draft PU while the verify
+        dispatch scores them.  The node is terminal — no successors and
+        no KV-stream registration (draft-cache residency is synced at
+        the verify boundary instead) — and is deleted on completion."""
+        n_p, w = meta["n"], meta["w"]
+        dn = Node(id=dag.fresh_id(f"{piece.id}.draft"), stage=meta["ds"],
+                  kind="stream_decode", workload=n_p * w,
+                  payload={"draft_round": True, "draft_for": piece.id,
+                           "no_coalesce": True,
+                           "decode_width": piece.payload.get(
+                               "decode_width", 1),
+                           "spec_width": w})
+        dag.add(dn)
+        dag.mark_running(dn.id, now, (meta["dp"], w))
+        return Dispatch(dn, meta["dp"], w, meta["td"], meta["bd"])
+
     def _log_choice(self, node: Node, batch: int) -> None:
         """Chosen-shape telemetry: resident width + token group per decode
         round, merged batch per fused dispatch (what the serving benchmark
@@ -768,6 +956,10 @@ class HeroScheduler:
             wh[w] = wh.get(w, 0) + 1
             gh = self.policy_log["decode_group"]
             gh[batch] = gh.get(batch, 0) + 1
+            sw = node.payload.get("spec_width")
+            if sw is not None and "spec_width" in self.policy_log:
+                sh = self.policy_log["spec_width"]
+                sh[sw] = sh.get(sw, 0) + 1
         elif "members" in node.payload:
             fh = self.policy_log["fused_batch"]
             fh[batch] = fh.get(batch, 0) + 1
@@ -823,6 +1015,11 @@ class HeroScheduler:
             # at the boundary (continuous batching — no rest sibling)
             node.workload = min(L, n)
             return node
+        if node.payload.get("draft_round"):
+            # a draft half re-pooled by a live straggler cancel runs
+            # whole: it is terminal and garbage-collected on completion,
+            # so a rest sibling would dangle in the successor map
+            return node
         if "members" in node.payload:
             return node    # fused dispatches run whole (membership is fixed)
         if not self.cfg.enable_partition or n >= L or node.kind in (
@@ -834,7 +1031,8 @@ class HeroScheduler:
                     group=node.group or node.id, payload=dict(node.payload))
         for k in ("pu_busy_acc", "decode_served", "decode_total",
                   "decode_rounds", "last_slice", "coalesced", "batch_pu",
-                  "round_final", "kv_migrations", "kv_bytes_moved"):
+                  "round_final", "kv_migrations", "kv_bytes_moved",
+                  "spec_drafted", "spec_accepted"):
             rest.payload.pop(k, None)   # batch accounting is per-node
         node.workload = n
         node.group = node.group or node.id

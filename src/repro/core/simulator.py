@@ -25,6 +25,7 @@ from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     fused_boundary_index)
 from repro.core.perf_model import Config, GroundTruthPerf
 from repro.core.scheduler import Dispatch, HeroScheduler
+from repro.core.spec_decode import spec_passes
 
 
 @dataclass
@@ -217,16 +218,39 @@ class Simulator:
         # ground truth shares the per-step weight sweep across members
         c = Config(d.pu, d.batch,
                    width=(d.node.payload.get("decode_width", 1)
-                          if d.node.payload.get("decode_round") else 1))
+                          if (d.node.payload.get("decode_round")
+                              or d.node.payload.get("draft_round"))
+                          else 1))
         if d.node.kind == "io":
             # the scheduler's io prediction (0.35 s round trip, or the
             # remaining admission delay for arrival-timer nodes)
             work, bw = d.predicted_p0, 0.0
         else:
-            passes = ceil_passes(d.node.workload, d.batch)
-            work = passes * self.gt.p0(stage, pu, c)
+            sds = d.node.payload.get("spec_draft_stage")
+            if sds is not None and sds in self.gt.stages:
+                # speculative verify round: the ground-truth accept rate
+                # (not the scheduler's EWMA estimate) decides how many
+                # verify sweeps the token group really takes; each sweep
+                # scores w+1 positions in one weight pass, pipelined
+                # against the draft stream (max) cross-PU or serialized
+                # (sum) on a shared PU.  The true pass count is stamped
+                # back so boundary accept counters reflect reality.
+                w = d.node.payload.get("spec_width", 1)
+                dpu = d.node.payload.get("spec_draft_pu", d.pu)
+                dsm = self.gt.stages[sds]
+                n_true = spec_passes(d.node.workload, w,
+                                     self.gt.spec_accept(dsm, stage))
+                d.node.payload["spec_passes"] = n_true
+                tv = self.gt.spec_verify_p0(stage, pu, w, c.width)
+                td = self.gt.p0(dsm, self.gt.soc.pu(dpu),
+                                Config(dpu, w, width=c.width))
+                work = n_true * (td + tv if dpu == d.pu else max(td, tv))
+            else:
+                passes = ceil_passes(d.node.workload, d.batch)
+                work = passes * self.gt.p0(stage, pu, c)
             bw = self.gt.bandwidth(stage, pu, c)
             if (d.node.kind == "stream_decode"
+                    and not d.node.payload.get("draft_round")
                     and self.sched.kv is not None):
                 # KV migration is real physics once residency is tracked:
                 # streams (round members or a solo token-group chain)

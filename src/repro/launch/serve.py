@@ -17,14 +17,16 @@ import time
 import jax
 import numpy as np
 
-from repro.api import HeroSession
+from repro.api import HeroSession, SessionOptions
 from repro.configs import get_family, reduced
+from repro.core.spec_decode import DEFAULT_DRAFT_MODEL, is_draft_stage
 from repro.models import build_model
 from repro.rag import (HashTokenizer, VectorDB, chunk_documents,
                        default_means, sample_traces, shared_corpus_traces,
                        synth_documents, synth_query)
 from repro.rag.agents import LMAgent
 from repro.rag.embedder import Embedder, Reranker
+from repro.rag.stages import DRAFT_MODELS
 
 
 def build_pipeline(seed: int = 0):
@@ -39,13 +41,16 @@ def build_pipeline(seed: int = 0):
     rerank = Reranker(*models["rerank"])
     rewriter = LMAgent(*models["search"], max_len=256)
     chat = LMAgent(*models["chat"], max_len=512)
-    return tok, embedder, rerank, rewriter, chat
+    dcfg = reduced(DRAFT_MODELS[DEFAULT_DRAFT_MODEL])
+    draft = LMAgent(dcfg, build_model(dcfg).init(
+        jax.random.fold_in(key, 991)), max_len=256)
+    return tok, embedder, rerank, rewriter, chat, draft
 
 
 def build_stage_fns(seed: int = 0):
     """Wire the executable pipeline into perf-stage callables — the
     ``stage_fns`` a live-backend :class:`HeroSession` dispatches to."""
-    tok, embedder, reranker, rewriter, chat = build_pipeline(seed)
+    tok, embedder, reranker, rewriter, chat, draft = build_pipeline(seed)
 
     docs = synth_documents(4, 400, seed=7)
     chunks = chunk_documents(docs, tok)
@@ -69,6 +74,13 @@ def build_stage_fns(seed: int = 0):
         return scores.tolist()
 
     def fn_llm(node, batch):
+        if is_draft_stage(node.stage):
+            # speculative draft sub-dispatch: the small draft model
+            # streams spec_width candidate tokens per verify pass
+            # (workload = passes × width); candidates are greedy, so the
+            # verify fn reproduces them for its acceptance comparison
+            return draft.generate(q_ids[:16],
+                                  max_new=min(node.workload, 16)).token_ids
         agent = rewriter if node.stage.startswith(("rewrite", "plan")) \
             else chat
         if node.kind == "stream_prefill":
@@ -81,13 +93,26 @@ def build_stage_fns(seed: int = 0):
             group = max(1, min(batch, 8))
             outs = agent.generate_batch([q_ids[:16]] * len(members),
                                         max_new=group)
+            if node.payload.get("spec_width"):
+                # speculative verify pass: accept the drafted prefix that
+                # matches the target's own greedy tokens (both models are
+                # deterministic, so regenerating the draft's candidates
+                # here is exact) and stamp the per-member accept counts
+                # the round boundary folds into the accept-rate EWMA
+                douts = draft.generate_batch([q_ids[:16]] * len(members),
+                                             max_new=group)
+                node.payload["spec_accepts"] = {
+                    m.id: sum(1 for a, b in zip(g.token_ids, dg.token_ids)
+                              if a == b)
+                    for m, g, dg in zip(members, outs, douts)}
             return {m.id: g.token_ids for m, g in zip(members, outs)}
         return agent.generate(q_ids[:16], max_new=min(batch, 8)).token_ids
 
     stage_fns = {s: fn_llm for s in
                  ("rewrite_prefill", "rewrite_decode", "plan_prefill",
                   "plan_decode", "refine_prefill", "refine_decode",
-                  "chat_prefill", "chat_decode")}
+                  "chat_prefill", "chat_decode", "rewrite_draft",
+                  "plan_draft", "refine_draft", "chat_draft")}
     stage_fns.update(embed=fn_embed, vsearch=fn_vsearch, rerank=fn_rerank,
                      __io__=lambda n, b: time.sleep(0.05))
     return stage_fns
@@ -110,17 +135,25 @@ def main():
                          "query at one shared retrieved corpus, so later "
                          "prefills hit the cross-query prefix cache "
                          "(implies --serve admission)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: decode rounds dispatch as "
+                         "coupled (draft, verify) pairs — the real draft "
+                         "model streams candidates the target verifies in "
+                         "one sweep (implies --serve admission)")
     args = ap.parse_args()
 
-    if args.prefix_cache:
+    if args.prefix_cache or args.spec_decode:
         args.serve = True
+    if args.prefix_cache:
         traces = shared_corpus_traces(args.dataset, args.queries, seed=1)
     else:
         traces = sample_traces(args.dataset, args.queries, seed=1)
     sess = HeroSession(world="sd8gen4", family="qwen3", backend="live",
                        means=default_means(traces),
-                       coalesce=args.serve or None,
-                       kv_pages=args.prefix_cache or None,
+                       options=SessionOptions(
+                           coalesce=bool(args.serve),
+                           kv_pages=bool(args.prefix_cache),
+                           spec_decode=bool(args.spec_decode)),
                        stage_fns=build_stage_fns())
     for qi, tr in enumerate(traces):
         sess.submit(tr, wf=args.workflow,
@@ -143,6 +176,12 @@ def main():
         print(f"prefix cache: {run.kv_page_hits} page hits, "
               f"{run.kv_hit_tokens} tokens skipped, "
               f"{run.kv_evictions} evictions")
+    if args.spec_decode and run is not None:
+        rate = (run.accepted_tokens / run.drafted_tokens
+                if run.drafted_tokens else 0.0)
+        print(f"spec decode: {run.spec_rounds} speculative rounds, "
+              f"{run.drafted_tokens} drafted / {run.accepted_tokens} "
+              f"accepted tokens (rate {rate:.2f})")
 
 
 if __name__ == "__main__":

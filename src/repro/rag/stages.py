@@ -2,10 +2,19 @@
 StageModel dict + the role map used by baseline static mappings."""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.configs import ModelConfig
+from repro.configs.qwen1p5_0p5b import CONFIG as _QWEN1P5_0P5B
 from repro.core.perf_model import StageModel
+from repro.core.spec_decode import DEFAULT_DRAFT_MODEL, draft_stage_of
+
+# registry of in-tree draft-model configs SessionOptions.draft_model
+# validates against (small enough to propose tokens the target verifies
+# in one sweep; the only sub-1B config shipped today)
+DRAFT_MODELS: Dict[str, ModelConfig] = {
+    "qwen1p5_0p5b": _QWEN1P5_0P5B,
+}
 
 
 def _kv_bytes_token(cfg: ModelConfig, bytes_per_param: float = 1.0) -> float:
@@ -24,11 +33,13 @@ def kv_page_bytes(cfg: ModelConfig, page_tokens: int = 64,
     return page_tokens * _kv_bytes_token(cfg, bytes_per_param)
 
 
-def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
+def build_stages(family: Dict[str, ModelConfig],
+                 draft_model: Optional[str] = DEFAULT_DRAFT_MODEL
+                 ) -> Dict[str, StageModel]:
     e, r = family["embed"], family["rerank"]
     s, c = family["search"], family["chat"]
     kv_s, kv_c = _kv_bytes_token(s), _kv_bytes_token(c)
-    return {
+    stages = {
         "embed": StageModel("embed", e.param_count(), e.d_model,
                             "batchable", item_tokens=128),
         "rerank": StageModel("rerank", r.param_count(), r.d_model,
@@ -56,6 +67,20 @@ def build_stages(family: Dict[str, ModelConfig]) -> Dict[str, StageModel]:
                                   kv_bytes_token=kv_c),
         "web": StageModel("web", 0, 0, "io"),
     }
+    # draft companions LAST: one small-model stream_decode stage per
+    # verify (``*_decode``) stage, named by the spec_decode convention.
+    # Appending after every existing entry keeps the perf-model fit's rng
+    # stream byte-identical for the pre-spec stages (fit iterates in
+    # insertion order), so spec_decode=False sessions stay bit-exact.
+    if draft_model is not None:
+        d = DRAFT_MODELS[draft_model]
+        kv_d = _kv_bytes_token(d)
+        for vname in [n for n, st in stages.items()
+                      if st.kind == "stream_decode"]:
+            dname = draft_stage_of(vname)
+            stages[dname] = StageModel(dname, d.param_count(), d.d_model,
+                                       "stream_decode", kv_bytes_token=kv_d)
+    return stages
 
 
 STAGE_ROLES: Dict[str, str] = {
@@ -64,4 +89,8 @@ STAGE_ROLES: Dict[str, str] = {
     "plan_prefill": "search_llm", "plan_decode": "search_llm",
     "refine_prefill": "chat", "refine_decode": "chat",
     "chat_prefill": "chat", "chat_decode": "chat", "web": "io",
+    # draft companions inherit their verify stage's role (static
+    # strategies place them alongside the target they propose for)
+    "rewrite_draft": "search_llm", "plan_draft": "search_llm",
+    "refine_draft": "chat", "chat_draft": "chat",
 }

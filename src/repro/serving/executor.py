@@ -270,7 +270,11 @@ class HeroRuntime:
                             if m.id in per:
                                 self.results.setdefault(m.id, []).append(
                                     per[m.id])
-                    else:
+                    elif not d.node.payload.get("draft_round"):
+                        # draft sub-dispatches get a fresh id per round —
+                        # storing their (candidate-token) results would
+                        # leak one entry per round; the verify fn is the
+                        # one that owes the stream its accepted output
                         self.results[nid] = task.result
                     prog = d.node.payload.get("on_progress")
                     dag.mark_done(nid, now())
@@ -313,7 +317,8 @@ class HeroRuntime:
         if d.pu == "io" or fn is None:
             fn = self.stage_fns.get("__io__", lambda n, b: None)
         task = _Task(d.node, d.batch, fn)
-        if d.node.kind == "stream_decode" and self.sched.kv is not None:
+        if (d.node.kind == "stream_decode" and self.sched.kv is not None
+                and not d.node.payload.get("draft_round")):
             # same registration the simulator does at dispatch start, so
             # kv_migrations / bytes-moved accounting is backend-independent
             # (wall-clock transfer cost is the stage fn's to pay — here it

@@ -16,7 +16,7 @@ import warnings
 import pytest
 
 from repro.api import HeroSession
-from repro.api.spec import StageSpec, WorkflowSpec
+from repro.api.spec import DecodeSpec, StageSpec, WorkflowSpec
 from repro.core import SchedulerConfig
 from repro.core.dag import Node
 from repro.core.kv_pages import (DISK, DRAM, PagedKVCache, decode_stage_for)
@@ -312,7 +312,8 @@ def test_spec_level_kv_stage_trap_and_override():
             StageSpec("gen_ctx", "oddgen", "stream_prefill",
                       lambda v: v.context_tokens,
                       shared_ctx=lambda v: v.context_tokens,
-                      kv_stage=kv_stage),
+                      decode=(DecodeSpec(kv_stage=kv_stage)
+                              if kv_stage else None)),
             StageSpec("gen", "oddgen_d", "stream_decode", lambda v: 8,
                       deps=("gen_ctx",)),
         ))
@@ -324,8 +325,30 @@ def test_spec_level_kv_stage_trap_and_override():
         warnings.simplefilter("error")
         dag = mk(STAGE).build_dag(trace)
     n = dag.nodes["gen_ctx"]
-    assert n.payload["kv_decode_stage"] == STAGE
+    assert n.payload["decode_spec"].kv_stage == STAGE
+    assert decode_stage_for(n) == STAGE
     assert sum(t for _k, t in n.payload["prefix_segments"]) == n.workload
+
+
+def test_stagespec_kv_stage_kwarg_deprecated_shim():
+    """PR 9 shim: the legacy ``StageSpec(kv_stage=...)`` kwarg warns and
+    folds into the typed ``decode=DecodeSpec(...)``; a conflicting pair
+    still raises."""
+    with pytest.warns(DeprecationWarning, match="kv_stage is deprecated"):
+        s = StageSpec("gen_ctx", "oddgen", "stream_prefill",
+                      lambda v: 64, kv_stage=STAGE)
+    assert s.decode == DecodeSpec(kv_stage=STAGE)
+    with pytest.warns(DeprecationWarning):
+        s2 = StageSpec("gen_ctx", "oddgen", "stream_prefill",
+                       lambda v: 64, kv_stage=STAGE,
+                       decode=DecodeSpec(draft_width=2))
+    assert s2.decode.kv_stage == STAGE
+    assert s2.decode.draft_width == 2
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="conflicts"):
+            StageSpec("gen_ctx", "oddgen", "stream_prefill",
+                      lambda v: 64, kv_stage=STAGE,
+                      decode=DecodeSpec(kv_stage="other_decode"))
 
 
 # --- gates + backend accounting protocol -------------------------------------

@@ -435,11 +435,19 @@ def test_deprecated_kwargs_warn_and_match_options(traces, means):
     assert run(legacy) == run(typed)
     # the shim and the typed path resolve to the same scheduler patch
     assert legacy.cfg_overrides == typed.cfg_overrides
-    # both surfaces at once is ambiguous
+    # both surfaces at once with DISAGREEING values is ambiguous
     with pytest.warns(DeprecationWarning):
         with pytest.raises(ValueError, match="not both"):
             HeroSession(world="sd8gen4", family="qwen3", coalesce=True,
                         options=SessionOptions())
+    # ...but a kwarg merely repeating the options= value is redundant,
+    # not fatal (ported callers that still forward old kwargs keep
+    # working) — PR 9 regression: this combination used to raise
+    with pytest.warns(DeprecationWarning, match="redundant"):
+        sess = HeroSession(
+            world="sd8gen4", family="qwen3", coalesce=True,
+            options=SessionOptions(coalesce=True, batch_policy="adaptive"))
+    assert sess.options.batch_policy == "adaptive"
     # invalid combos surface at construction, not deep in the scheduler
     with pytest.warns(DeprecationWarning):
         with pytest.raises(ValueError, match="kv_prefetch"):

@@ -1,0 +1,293 @@
+"""Speculative decoding (the PR 9 tentpole).
+
+Covers the ISSUE's required invariants: the pass arithmetic and the
+accept-rate EWMA (:mod:`repro.core.spec_decode`), draft KV pages are
+never pinned and always evicted before verify pages, rejected-token
+rollback at a round boundary never moves the draft mirror below the
+served verify context, ``spec_decode=False`` through the typed
+``SessionOptions`` path stays bit-identical to the PR 2 / PR 3
+goldens, and the counter protocol — per-query ``QueryResult`` stamps
+sum to the ``BackendRun`` totals with the width grid exercised — on
+both backends.
+"""
+import json
+import math
+import os
+import time
+
+import pytest
+
+from repro.api import DecodeSpec, HeroSession, SessionOptions
+from repro.core.dag import Node
+from repro.core.kv_pages import DRAFT_KEY, DRAM, PagedKVCache
+from repro.core.kv_residency import stream_key
+from repro.core.perf_model import LinearPerfModel
+from repro.core.spec_decode import (SpecTracker, draft_stage_of,
+                                    is_draft_stage, spec_passes)
+from repro.rag import default_means, sample_traces
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+
+STAGE = "chat_decode"
+DRAFT = "chat_draft"
+
+
+# --- leaf arithmetic ----------------------------------------------------------
+
+def test_spec_passes_bounds_and_degradation():
+    # alpha = 0 degrades to plain one-token-per-pass decode
+    assert spec_passes(64, 4, 0.0) == 64
+    # width 0 likewise — nothing drafted, nothing accepted
+    assert spec_passes(64, 0, 0.9) == 64
+    # the expected-pass formula: ceil(g / (1 + alpha*w))
+    assert spec_passes(64, 4, 0.5) == math.ceil(64 / 3.0) == 22
+    # never below one pass, alpha clamped into [0, 1]
+    assert spec_passes(1, 8, 1.0) == 1
+    assert spec_passes(10, 4, 5.0) == 2
+
+
+def test_draft_stage_naming_convention():
+    assert draft_stage_of("chat_decode") == "chat_draft"
+    assert draft_stage_of("rewrite_decode") == "rewrite_draft"
+    assert draft_stage_of("chat_prefill") is None
+    # draft stages never recurse into drafts of drafts
+    assert draft_stage_of("chat_draft") is None
+    assert is_draft_stage("chat_draft") and not is_draft_stage(STAGE)
+
+
+def test_spec_tracker_ewma_and_run_totals():
+    tr = SpecTracker(init=0.6, weight=0.5)
+    assert tr.alpha("s") == 0.6
+    # profiled pair prior overrides the tracker-wide init for unseen keys
+    assert tr.alpha("s", 0.2) == 0.2
+    tr.observe("s", drafted=8, accepted=4)
+    assert tr.alpha("s") == pytest.approx(0.5 * 0.6 + 0.5 * 0.5)
+    # once observed, the prior no longer applies
+    assert tr.alpha("s", 0.2) == tr.alpha("s")
+    assert (tr.drafted_tokens, tr.accepted_tokens, tr.rounds) == (8, 4, 1)
+    assert tr.accept_rate == pytest.approx(0.5)
+    # accepted clamps into [0, drafted]; zero drafted is a no-op
+    tr.observe("s", 4, 10)
+    assert tr.accepted_tokens == 8 and tr.drafted_tokens == 12
+    tr.observe("s", 0, 5)
+    assert tr.rounds == 2
+
+
+# --- draft KV: eviction priority + rollback boundary --------------------------
+
+def spec_perf(caps=None):
+    """A LinearPerfModel with 1 byte/token for both the verify stage and
+    its draft companion, and handcrafted tier capacities."""
+    m = LinearPerfModel()
+    m._tiles = {"gpu": 8}
+    m._b0 = 1e9
+    m.kv_bytes = {STAGE: 1.0, DRAFT: 1.0}
+    m.phi_coef = {STAGE: [1.0, 0.0, 0.0], DRAFT: [1.0, 0.0, 0.0]}
+    m.kv_tiers = dict(caps or {})
+    return m
+
+
+def member(nid="q0/d", workload=256):
+    return Node(id=nid, stage=STAGE, kind="stream_decode",
+                workload=workload, payload={})
+
+
+def check_accounting(kv):
+    for tier in kv._tier_pages:
+        used = sum(kv._page_bytes(kv._pages[p])
+                   for p in kv._tier_pages[tier])
+        assert kv._tier_used.get(tier, 0.0) == pytest.approx(used)
+
+
+def test_draft_pages_never_pinned_and_evicted_before_verify():
+    """The draft mirror's pages are unpinned (``refs == 0``) and leave
+    the arena before ANY verify page: under pressure the demotion picks
+    a draft page even when older verify pages are equally evictable."""
+    kv = PagedKVCache(spec_perf(caps={"gpu": 300.0}), page_tokens=64)
+    m = member()
+    kv.on_boundary(m, "gpu", 128)             # verify: 2 pages, 128 B
+    kv.spec_draft_sync(m, DRAFT, "gpu")       # draft mirror: 128 B more
+    dst = kv._streams[stream_key(m) + DRAFT_KEY]
+    assert dst.ctx_tokens == 128
+    dpages = [kv._pages[p] for p in dst.pages]
+    assert all(pg.draft and pg.refs == 0 for pg in dpages)
+    check_accounting(kv)
+
+    # grow the verify stream past capacity: 256 + 64 > 300 forces one
+    # eviction — it must be a draft page, though the verify pages are
+    # older (smaller LRU clock) and equally unpinned
+    kv.on_boundary(m, "gpu", 64)
+    assert kv.evictions == 1
+    vst = kv._streams[stream_key(m)]
+    assert all(kv._pages[p].tier == "gpu" for p in vst.pages)
+    demoted = [pg for pg in kv._pages.values()
+               if pg.draft and pg.tier == DRAM]
+    assert len(demoted) == 1                  # the victim was draft KV
+    check_accounting(kv)
+
+
+def test_rollback_never_moves_draft_mirror_below_served_boundary():
+    """Rejected-token rollback: a speculative tail written ahead of the
+    verify boundary trims back exactly to the served context — never
+    below it — and forward growth tracks the verify stream."""
+    kv = PagedKVCache(spec_perf(), page_tokens=64)
+    m = member()
+    kv.on_boundary(m, "gpu", 100)
+    kv.spec_draft_sync(m, DRAFT, "gpu")
+    key = stream_key(m) + DRAFT_KEY
+    assert kv._streams[key].ctx_tokens == 100
+
+    # speculative tail in flight: the draft model streamed 37 candidate
+    # tokens past the boundary that the verify pass then rejected
+    st = kv._streams[key]
+    tail = kv._alloc(DRAFT, 37, "gpu", None, m)
+    tail.draft = True
+    st.pages.append(tail.pid)
+    st.ctx_tokens += 37
+    kv.spec_draft_sync(m, DRAFT, "gpu")       # boundary: roll the tail back
+    assert kv._streams[key].ctx_tokens == 100
+    assert sum(kv._pages[p].tokens for p in st.pages) == 100
+    check_accounting(kv)
+
+    # forward growth after the rollback still tracks the verify stream
+    kv.on_boundary(m, "gpu", 50)
+    kv.spec_draft_sync(m, DRAFT, "gpu")
+    assert kv._streams[key].ctx_tokens == 150
+    check_accounting(kv)
+
+    # terminal release frees BOTH footprints
+    kv.release(m)
+    assert stream_key(m) not in kv._streams and key not in kv._streams
+    assert not any(pg.draft for pg in kv._pages.values())
+
+
+# --- typed options: validation ------------------------------------------------
+
+def test_session_options_spec_validation():
+    with pytest.raises(ValueError, match="spec_decode"):
+        SessionOptions(spec_decode=True)          # needs coalesce
+    with pytest.raises(ValueError, match="draft_model"):
+        SessionOptions(draft_model="qwen1p5_0p5b")  # needs spec_decode
+    with pytest.raises(ValueError, match="draft_model"):
+        SessionOptions(coalesce=True, spec_decode=True,
+                       draft_model="nope_7b")
+    ok = SessionOptions(coalesce=True, batch_policy="adaptive",
+                        spec_decode=True, draft_model="qwen1p5_0p5b")
+    ov = ok.scheduler_overrides()
+    assert ov["spec_decode"] is True
+    assert ov["draft_model"] == "qwen1p5_0p5b"
+    with pytest.raises(ValueError):
+        DecodeSpec(draft_model="nope_7b")
+    with pytest.raises(ValueError):
+        DecodeSpec(draft_width=0)
+
+
+# --- spec off: bit-identical to the PR 2 / PR 3 goldens -----------------------
+
+@pytest.fixture(scope="module")
+def traces():
+    return sample_traces("hotpotqa", 8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def means(traces):
+    return default_means(traces)
+
+
+def test_spec_off_reproduces_pr2_goldens_via_options(traces, means):
+    """The typed options path with the spec knobs present-and-off must
+    reproduce the PR 2 coalesce-off goldens bit-exactly."""
+    with open(os.path.join(GOLDEN_DIR, "pr2_coalesce_off.json")) as f:
+        golden = json.load(f)
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       options=SessionOptions(coalesce=False,
+                                              batch_policy="fixed"))
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * 0.25)
+    got = [r.makespan for r in sess.run()]
+    assert got == pytest.approx(golden["staggered8_w1_makespans"], rel=1e-12)
+
+
+@pytest.mark.parametrize("regime,ia", [("saturated", 0.25),
+                                       ("staggered", 2.0)])
+def test_spec_off_reproduces_pr3_goldens_via_options(traces, means, regime,
+                                                     ia):
+    with open(os.path.join(GOLDEN_DIR, "pr3_decode_batch.json")) as f:
+        golden = json.load(f)
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       options=SessionOptions(coalesce=True,
+                                              batch_policy="fixed"))
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * ia)
+    got = [r.makespan for r in sess.run()]
+    assert got == pytest.approx(golden[f"{regime}8_w1_decode_makespans"],
+                                rel=1e-12)
+
+
+# --- counter protocol on both backends ----------------------------------------
+
+SPEC_OPTS = dict(coalesce=True, batch_policy="adaptive", spec_decode=True)
+
+
+def _spec_session(traces, means, backend="sim", ia=2.0, **kw):
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       backend=backend,
+                       options=SessionOptions(**SPEC_OPTS), **kw)
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * ia)
+    return sess
+
+
+def test_spec_counters_sim_sum_to_run_totals(traces, means):
+    """Per-query ``QueryResult`` stamps sum to the ``BackendRun`` totals
+    (the preemptions counter contract), the width grid is exercised,
+    and the EWMA observed real rounds (drafted > 0)."""
+    sess = _spec_session(traces, means)
+    results = sess.run()
+    run = sess.last_run
+    assert run.spec_rounds > 0 and run.drafted_tokens > 0
+    assert 0 <= run.accepted_tokens <= run.drafted_tokens
+    assert sum(r.drafted_tokens for r in results) == run.drafted_tokens
+    assert sum(r.accepted_tokens for r in results) == run.accepted_tokens
+    for r in results:
+        if r.drafted_tokens:
+            assert r.accept_rate == pytest.approx(
+                r.accepted_tokens / r.drafted_tokens)
+        else:
+            assert r.accept_rate is None
+    # the width grid was exercised: the histogram counts speculative
+    # DISPATCHES; the tracker's rounds count per-member boundary
+    # observations, so dispatches never exceed member-rounds
+    widths = run.batching.get("spec_width", {})
+    assert widths and all(int(w) >= 1 for w in widths)
+    assert 0 < sum(widths.values()) <= run.spec_rounds
+
+
+def test_spec_off_has_no_spec_surface(traces, means):
+    sess = HeroSession(world="sd8gen4", family="qwen3", means=means,
+                       options=SessionOptions(coalesce=True,
+                                              batch_policy="adaptive"))
+    for qi, tr in enumerate(traces):
+        sess.submit(tr, wf=1, arrival_time=qi * 2.0)
+    results = sess.run()
+    run = sess.last_run
+    assert run.drafted_tokens == run.accepted_tokens == run.spec_rounds == 0
+    assert "spec_width" not in run.batching
+    assert all(r.drafted_tokens == 0 and r.accept_rate is None
+               for r in results)
+
+
+def test_spec_counters_live_parity(means):
+    """The live executor runs the same (draft, verify) pairs: counters
+    follow the identical protocol and the width grid is exercised."""
+    traces6 = sample_traces("hotpotqa", 6, seed=11)
+    sess = _spec_session(
+        traces6, default_means(traces6), backend="live", ia=0.0,
+        stage_fns={"chat_decode": lambda n, b: time.sleep(0.02)})
+    results = sess.run(timeout=180)
+    run = sess.last_run
+    assert run.spec_rounds > 0 and run.drafted_tokens > 0
+    assert sum(r.drafted_tokens for r in results) == run.drafted_tokens
+    assert sum(r.accepted_tokens for r in results) == run.accepted_tokens
+    widths = run.batching.get("spec_width", {})
+    assert widths and 0 < sum(widths.values()) <= run.spec_rounds
