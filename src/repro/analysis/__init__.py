@@ -1,0 +1,47 @@
+"""Static invariant checking for the scheduler core.
+
+Three tools, one package:
+
+- :mod:`repro.analysis.lint` — AST-based repo-specific rules
+  (``python -m repro.analysis.lint src/``): event-name registry
+  discipline, SchedulerConfig gate hygiene, ``perf_model.fit()``
+  rng-stream ordering, core determinism, BackendRun/QueryResult
+  counter pairing.
+- :mod:`repro.analysis.validate` — pre-run structural validation of
+  :class:`repro.api.spec.WorkflowSpec` and assembled
+  :class:`repro.core.dag.DynamicDAG` graphs, wired into
+  ``WorkflowSpec.build_dag`` behind ``SessionOptions.validate_spec``.
+- :mod:`repro.analysis.tracecheck` — a happens-before checker over
+  recorded timeline traces and bench artifacts
+  (``python -m repro.analysis.tracecheck [files...]``): per-node
+  lifecycle state machines, per-PU serve-interval monotonicity, and
+  KV / counter conservation.
+
+The rationale: every PR since PR 5 shipped alongside hand-found
+protocol bugs — double-counted spec counters, dangling successor
+entries after round GC, leaked soft-overflow accounting — all
+violations of *implicit* invariants nothing checked mechanically.
+These tools make the invariants explicit and CI-enforced.
+"""
+_EXPORTS = {
+    "Violation": "repro.analysis.lint",
+    "lint_paths": "repro.analysis.lint",
+    "SpecIssue": "repro.analysis.validate",
+    "SpecValidationError": "repro.analysis.validate",
+    "ensure_valid": "repro.analysis.validate",
+    "validate_dag": "repro.analysis.validate",
+    "validate_spec": "repro.analysis.validate",
+    "TraceViolation": "repro.analysis.tracecheck",
+    "check_trace": "repro.analysis.tracecheck",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.analysis.<tool>` doesn't trip runpy's
+    # found-in-sys.modules warning by importing its sibling tools
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

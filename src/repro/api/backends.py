@@ -27,12 +27,26 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
+from repro.core import checks
 from repro.core.dag import DynamicDAG, Node
+from repro.core.events import (EV_PREEMPT, EV_REDISPATCH, EV_RETRY,
+                               EV_START, EV_STRAGGLER)
 from repro.core.perf_model import GroundTruthPerf
 from repro.core.scheduler import HeroScheduler
 from repro.core.simulator import Simulator
 
 Observer = Callable[[float, str, Node], None]
+
+# BackendRun counters that deliberately have NO per-query QueryResult
+# attribution field (repro.analysis.lint rule CNT001 enforces that every
+# other counter is paired).  These measure *global* cache pressure or
+# round-shared phenomena: an eviction / soft overflow is caused by the
+# whole working set, not any one query, and spec_rounds counts shared
+# cross-query decode rounds — slicing them per query would assert an
+# attribution the physics does not have.
+RUN_ONLY_COUNTERS = frozenset({
+    "kv_evictions", "kv_evicted_bytes", "kv_soft_overflows", "spec_rounds",
+})
 
 
 @dataclass
@@ -52,6 +66,11 @@ class BackendRun:
     # is off): decode-round cache moves and the bytes they shipped
     kv_migrations: int = 0
     kv_bytes_moved: float = 0.0
+    # spill-tier gathers on the paged store (pages fetched back from
+    # dram/disk at dispatch; zero unless ``kv_pages`` is on) — distinct
+    # from migrations, which move between PU arenas
+    kv_fetches: int = 0
+    kv_fetched_bytes: float = 0.0
     # paged-KV totals (zero unless ``kv_pages`` is on): prefix-cache hits,
     # the prefill tokens they skipped, and tier-eviction traffic
     kv_page_hits: int = 0
@@ -123,18 +142,23 @@ class SimBackend:
         # count timeline events (fused dispatches fan out to member
         # events), the same convention LiveBackend uses — run-level
         # counters must be backend-independent
+        if checks.enabled() and scheduler.kv is not None:
+            scheduler.kv.check_quiescent()
         return BackendRun(makespan=res.makespan, events=res.timeline,
                           pu_busy=dict(res.pu_busy),
                           dispatches=sum(1 for e in res.timeline
-                                         if e[1] == "start"),
+                                         if e[1] == EV_START),
                           redispatches=sum(1 for e in res.timeline
-                                           if e[1] == "redispatch"),
+                                           if e[1] == EV_REDISPATCH),
                           batching={k: dict(v) for k, v in
                                     scheduler.policy_log.items()},
                           kv_migrations=(scheduler.kv.migrations
                                          if scheduler.kv else 0),
                           kv_bytes_moved=(scheduler.kv.bytes_moved
                                           if scheduler.kv else 0.0),
+                          kv_fetches=getattr(scheduler.kv, "fetches", 0),
+                          kv_fetched_bytes=getattr(scheduler.kv,
+                                                   "fetched_bytes", 0.0),
                           kv_page_hits=getattr(scheduler.kv, "hits", 0),
                           kv_hit_tokens=getattr(scheduler.kv,
                                                 "hit_tokens", 0),
@@ -153,7 +177,7 @@ class SimBackend:
                           kv_prefetch_hits=getattr(scheduler.kv,
                                                    "prefetch_hits", 0),
                           preemptions=sum(1 for e in res.timeline
-                                          if e[1] == "preempt"),
+                                          if e[1] == EV_PREEMPT),
                           drafted_tokens=getattr(spec, "drafted_tokens", 0),
                           accepted_tokens=getattr(spec,
                                                   "accepted_tokens", 0),
@@ -218,6 +242,8 @@ class LiveBackend:
         finally:
             for ex in executors.values():
                 ex.shutdown()
+        if checks.enabled() and scheduler.kv is not None:
+            scheduler.kv.check_quiescent()
         events = list(rt.events)
         spec = getattr(scheduler, "spec", None)
         pu_busy: Dict[str, float] = {}
@@ -230,14 +256,16 @@ class LiveBackend:
                                         + n.finish - n.start)
         return BackendRun(
             makespan=dag.makespan(), events=events, pu_busy=pu_busy,
-            dispatches=sum(1 for e in events if e[1] == "start"),
+            dispatches=sum(1 for e in events if e[1] == EV_START),
             redispatches=sum(1 for e in events
-                             if e[1] in ("straggler", "retry")),
+                             if e[1] in (EV_STRAGGLER, EV_RETRY)),
             batching={k: dict(v) for k, v in
                       scheduler.policy_log.items()},
             kv_migrations=scheduler.kv.migrations if scheduler.kv else 0,
             kv_bytes_moved=(scheduler.kv.bytes_moved
                             if scheduler.kv else 0.0),
+            kv_fetches=getattr(scheduler.kv, "fetches", 0),
+            kv_fetched_bytes=getattr(scheduler.kv, "fetched_bytes", 0.0),
             kv_page_hits=getattr(scheduler.kv, "hits", 0),
             kv_hit_tokens=getattr(scheduler.kv, "hit_tokens", 0),
             kv_evictions=getattr(scheduler.kv, "evictions", 0),
@@ -247,7 +275,7 @@ class LiveBackend:
             kv_prefetches=getattr(scheduler.kv, "prefetches", 0),
             kv_prefetch_bytes=getattr(scheduler.kv, "prefetch_bytes", 0.0),
             kv_prefetch_hits=getattr(scheduler.kv, "prefetch_hits", 0),
-            preemptions=sum(1 for e in events if e[1] == "preempt"),
+            preemptions=sum(1 for e in events if e[1] == EV_PREEMPT),
             drafted_tokens=getattr(spec, "drafted_tokens", 0),
             accepted_tokens=getattr(spec, "accepted_tokens", 0),
             spec_rounds=getattr(spec, "rounds", 0))

@@ -67,6 +67,11 @@ class SessionOptions:
     # draft-model registry key (rag.stages.DRAFT_MODELS) for spec_decode;
     # None keeps the catalog default the stage set was built with
     draft_model: Optional[str] = None
+    # run repro.analysis.validate over every submitted WorkflowSpec (and
+    # the assembled DAG) before execution: structural errors (dep cycles,
+    # unknown deps, DecodeSpec placement, the kv_stage naming trap) raise
+    # SpecValidationError up front instead of failing mid-run
+    validate_spec: bool = False
     # escape hatch: raw SchedulerConfig field overrides for knobs with no
     # typed surface (keys validated at construction)
     cfg_overrides: Optional[Mapping[str, Any]] = None
@@ -119,7 +124,8 @@ class SessionOptions:
         its default (typed-field precedence — the sugar-kwarg semantics)."""
         out: Dict[str, Any] = dict(self.cfg_overrides or {})
         for f in dataclasses.fields(type(self)):
-            if f.name == "cfg_overrides":
+            # session-level knobs with no SchedulerConfig counterpart
+            if f.name in ("cfg_overrides", "validate_spec"):
                 continue
             v = getattr(self, f.name)
             if v != f.default:

@@ -9,7 +9,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from repro.core.dag import DynamicDAG
+from repro.core.dag import DONE, DynamicDAG
+from repro.core.events import EV_START, REDISPATCH_EVENTS
 
 ADMIT_STAGE = "admit"     # session-inserted arrival-timer nodes
 
@@ -36,6 +37,10 @@ class QueryResult:
     # rounds moving PU under kv_residency tracking) and the bytes shipped
     kv_migrations: int = 0
     kv_bytes_moved: float = 0.0
+    # spill-tier gathers this query's decode streams paid (pages fetched
+    # back from dram/disk at dispatch; zero unless ``kv_pages`` is on)
+    kv_fetches: int = 0
+    kv_fetched_bytes: float = 0.0
     # paged-KV prefix-cache hits on this query's prefills and the prefill
     # tokens those hits skipped (zero unless ``kv_pages`` is on)
     kv_page_hits: int = 0
@@ -92,16 +97,18 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         finish = h.arrival_time
         coalesced = rounds = kv_migs = page_hits = hit_tokens = 0
         hit_declined = prefetches = prefetch_hits = preempts = 0
-        drafted = accepted = 0
-        kv_bytes = prefetch_bytes = 0.0
+        drafted = accepted = fetches = 0
+        kv_bytes = prefetch_bytes = fetched_bytes = 0.0
         for n in nodes:
             # preemption releases survive even on nodes a later cancel
             # finalized without running (start < 0)
             preempts += n.payload.get("preemptions", 0)
-            if n.status != "done" or n.start < 0:
+            if n.status != DONE or n.start < 0:
                 continue
             kv_migs += n.payload.get("kv_migrations", 0)
             kv_bytes += n.payload.get("kv_bytes_moved", 0.0)
+            fetches += n.payload.get("kv_fetches", 0)
+            fetched_bytes += n.payload.get("kv_fetched_bytes", 0.0)
             page_hits += n.payload.get("kv_page_hits", 0)
             hit_tokens += n.payload.get("kv_hit_tokens", 0)
             hit_declined += n.payload.get("kv_hit_declined", 0)
@@ -141,9 +148,9 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
         for t, event, nid in run.events:
             if not nid.startswith(h.prefix) or nid == admit_id:
                 continue
-            if event == "start":
+            if event == EV_START:
                 dispatches += 1
-            elif event in ("redispatch", "straggler", "retry"):
+            elif event in REDISPATCH_EVENTS:
                 redispatches += 1
         res = QueryResult(
             qid=h.qid, workflow=h.spec.name, backend=backend_name,
@@ -153,6 +160,7 @@ def collect_results(dag: DynamicDAG, handles, run, backend_name: str
             redispatches=redispatches, n_nodes=len(nodes),
             coalesced_nodes=coalesced, decode_rounds=rounds,
             kv_migrations=kv_migs, kv_bytes_moved=kv_bytes,
+            kv_fetches=fetches, kv_fetched_bytes=fetched_bytes,
             kv_page_hits=page_hits, kv_hit_tokens=hit_tokens,
             kv_hit_declined=hit_declined, kv_prefetches=prefetches,
             kv_prefetch_bytes=prefetch_bytes,

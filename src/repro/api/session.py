@@ -54,6 +54,7 @@ from repro.api.options import SLO_CLASSES, SessionOptions
 from repro.api.results import ADMIT_STAGE, QueryResult, collect_results
 from repro.api.spec import WorkflowSpec, builtin_spec
 from repro.core.dag import DynamicDAG, Node
+from repro.core.events import EV_DONE, EV_TOKENS
 from repro.core.perf_model import (GroundTruthPerf, LinearPerfModel, SoCSpec,
                                    snapdragon_8gen3, snapdragon_8gen4)
 from repro.core.scheduler import (HeroScheduler, SchedulerConfig,
@@ -274,8 +275,14 @@ class HeroSession:
                                     kind="io", workload=1,
                                     payload={"arrival": h.arrival_time})).id
             h.spec.build_dag(h.trace, fine_grained=fine, prefix=h.prefix,
-                             dag=dag, gate_dep=gate)
+                             dag=dag, gate_dep=gate,
+                             validate=self.options.validate_spec)
             h._dag = dag    # cancel() routes through the live DAG
+        if self.options.validate_spec:
+            # graph-level pass over the assembled multi-query DAG
+            # (cross-query issues a single spec cannot see)
+            from repro.analysis.validate import ensure_valid
+            ensure_valid(dag=dag)
         sched = self._scheduler(cfg, specs)
         # query-namespace -> SLO class: covers every node of the query,
         # including ones expanders create mid-run
@@ -300,7 +307,8 @@ class HeroSession:
             cfg = self._scheduler_cfg([h.spec])
             fine = (self.fine_grained if self.fine_grained is not None
                     else cfg.enable_partition)
-            dag = h.spec.build_dag(h.trace, fine_grained=fine)
+            dag = h.spec.build_dag(h.trace, fine_grained=fine,
+                                   validate=self.options.validate_spec)
             h._dag = dag
             sched = self._scheduler(cfg, [h.spec])
             sched.slo_classes = {"": h.slo}
@@ -370,20 +378,21 @@ class HeroSession:
             # "done": a node (or solo decode piece) finished; "tokens": a
             # resident continuous-batching member advanced one token group
             # at a decode-round boundary without finishing
-            if event not in ("done", "tokens") or node.stage == ADMIT_STAGE:
+            if (event not in (EV_DONE, EV_TOKENS)
+                    or node.stage == ADMIT_STAGE):
                 return
             for h in routed:
                 if not node.id.startswith(h.prefix):
                     continue
-                if event == "done" and h.on_stage_done is not None:
+                if event == EV_DONE and h.on_stage_done is not None:
                     h.on_stage_done(h, node, t)
                 if (h.on_token is not None and node.kind == "stream_decode"
                         and node.template == h.spec.final_decode()):
                     # one callback per finished token group (sub-stage
                     # partitioning or decode-round boundaries make this the
                     # streaming granularity)
-                    tokens = (node.payload["last_slice"] if event == "tokens"
-                              else node.workload)
+                    tokens = (node.payload["last_slice"]
+                              if event == EV_TOKENS else node.workload)
                     h.on_token(h, tokens, t)
                 break
 

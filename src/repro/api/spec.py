@@ -272,12 +272,24 @@ class WorkflowSpec:
     # -- DAG derivation ------------------------------------------------------
     def build_dag(self, trace, fine_grained: bool = True, prefix: str = "",
                   dag: Optional[DynamicDAG] = None,
-                  gate_dep: Optional[str] = None) -> DynamicDAG:
+                  gate_dep: Optional[str] = None,
+                  validate: bool = False) -> DynamicDAG:
         """Materialize G_obs(0) (+ runtime expanders) for one query.
 
         ``gate_dep``: optional node id every root stage depends on — the
         session's admission gate (a timer node carrying the query's
-        arrival time)."""
+        arrival time).
+
+        ``validate``: run ``repro.analysis.validate`` over this spec
+        first — structural errors (dep cycles, unknown deps, DecodeSpec
+        placement, the kv_stage naming trap) raise
+        :class:`repro.analysis.validate.SpecValidationError` before any
+        node is materialized.  Off by default (the session enables it
+        via ``SessionOptions.validate_spec``); imported lazily so the
+        core build path never depends on the analysis package."""
+        if validate:
+            from repro.analysis.validate import ensure_valid
+            ensure_valid(spec=self)
         dag = dag if dag is not None else DynamicDAG()
         v = View.of(trace)
         col = self.collector

@@ -10,14 +10,14 @@ from __future__ import annotations
 
 from typing import Optional
 
-from repro.core.dag import Node
+from repro.core.dag import RUNNING, Node
 from repro.core.perf_model import LinearPerfModel
 
 
 def contention_penalty(perf: LinearPerfModel, v_star: Optional[Node],
                        b_cand: float, B_now: float, now: float) -> float:
     """W_B (Eq. 5).  0 when there is no running critical node."""
-    if v_star is None or v_star.status != "running" or v_star.config is None:
+    if v_star is None or v_star.status != RUNNING or v_star.config is None:
         return 0.0
     pu, batch = v_star.config
     if pu == "io":                 # external calls consume no bandwidth

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-from repro.core.dag import DynamicDAG, Node, WorkflowTemplate
+from repro.core.dag import (DONE, RUNNING, DynamicDAG, Node,
+                            WorkflowTemplate)
 from repro.core.partitioner import best_batch
 from repro.core.perf_model import LinearPerfModel
 
@@ -48,13 +49,13 @@ def observed_scores(dag: DynamicDAG, perf: LinearPerfModel,
     cache: Dict[str, float] = {}
     scores: Dict[str, float] = {}
     for node in reversed(dag.topo_order()):
-        if node.status == "done":
+        if node.status == DONE:
             scores[node.id] = 0.0
             continue
         succ_max = max((scores.get(s.id, 0.0)
                         for s in dag.successors(node.id)), default=0.0)
         own = _sjf_latency(perf, node, cache)
-        if node.status == "running" and node.start >= 0:
+        if node.status == RUNNING and node.start >= 0:
             own = max(0.0, own - (now - node.start))
         scores[node.id] = own + succ_max
     return scores

@@ -63,6 +63,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.dag import Node
+from repro.core.events import (EV_KV_EVICT, EV_KV_HIT_DECLINED,
+                               EV_KV_PAGE_HIT, EV_KV_PREFETCH,
+                               EV_KV_SOFT_OVERFLOW)
 from repro.core.kv_residency import _kv_members, stream_key
 from repro.core.perf_model import LinearPerfModel
 
@@ -301,7 +304,7 @@ class PagedKVCache:
                        if self._pages[pid].refs <= 0]
             if not victims:
                 self.soft_overflows += 1      # all pinned: soft overflow
-                self._events.append(("kv_soft_overflow", node))
+                self._events.append((EV_KV_SOFT_OVERFLOW, node))
                 return
             # draft pages always go first (the key's leading bool): with
             # no draft pages present the ordering is exactly the
@@ -320,7 +323,7 @@ class PagedKVCache:
                 self._place(pg, dst)
             self.evictions += 1
             self.evicted_bytes += self._page_bytes(pg)
-            self._events.append(("kv_evict", node))
+            self._events.append((EV_KV_EVICT, node))
 
     # -- stream bookkeeping --------------------------------------------------
     def _ensure(self, m: Node) -> PagedStream:
@@ -522,8 +525,16 @@ class PagedKVCache:
                     self._touch(self._pages[pid])
                 moved.append((m, tier, toks, by))
                 if tier in (DRAM, DISK):
+                    # tier fetches are attributed like migrations: on the
+                    # tracker for run totals AND on the member payload for
+                    # per-query results — the orphaned-counter violation
+                    # repro.analysis.lint rule CNT001 exists to catch
                     self.fetches += 1
                     self.fetched_bytes += by
+                    m.payload["kv_fetches"] = (
+                        m.payload.get("kv_fetches", 0) + 1)
+                    m.payload["kv_fetched_bytes"] = (
+                        m.payload.get("kv_fetched_bytes", 0.0) + by)
                 else:
                     stream_moved = True
                     self.bytes_moved += by
@@ -584,6 +595,40 @@ class PagedKVCache:
                         and any(self._pages[pid].refs <= 0
                                 for pid in self._tier_pages.get(tier, ()))):
                     self._make_room(tier, 0.0, m)
+
+    # -- runtime invariants (REPRO_CHECK=1) ----------------------------------
+    def check_quiescent(self) -> None:
+        """Assert the paged store's end-of-run conservation guarantees.
+        Unlike the monolithic tracker, resident bytes do NOT return to
+        zero — hashed prefix pages stay resident at ``refs == 0`` by
+        design, reusable by the next query — so quiescence here means:
+        no stream is still tracked, no page is still pinned, every
+        tier's byte accounting matches its page table, and no tier is
+        left over capacity (the soft-overflow demote-on-release
+        guarantee).  Called by both backends at end of run when
+        ``REPRO_CHECK=1`` (see ``core/checks.py``)."""
+        from repro.core.checks import invariant
+        invariant(not self._streams,
+                  "PagedKVCache quiescence: streams still tracked at end "
+                  f"of run: {sorted(self._streams)[:6]}")
+        pinned = [pg.pid for pg in self._pages.values() if pg.refs > 0]
+        invariant(not pinned,
+                  "PagedKVCache quiescence: pages still pinned at end of "
+                  f"run: {pinned[:8]}")
+        tiers = set(self._tier_pages) | set(self._tier_used)
+        for tier in sorted(tiers):
+            want = sum(self._page_bytes(self._pages[pid])
+                       for pid in self._tier_pages.get(tier, ()))
+            got = self._tier_used.get(tier, 0.0)
+            invariant(abs(got - want) <= 1e-6 * max(want, 1.0),
+                      f"PagedKVCache tier {tier!r}: _tier_used={got} "
+                      f"disagrees with page table total {want}")
+            invariant(got <= self._capacity(tier)
+                      + 1e-6 * max(self._capacity(tier), 1.0)
+                      or not self._tier_pages.get(tier),
+                      f"PagedKVCache tier {tier!r}: {got} bytes resident "
+                      f"above capacity {self._capacity(tier)} after all "
+                      "streams released")
 
     def spec_draft_sync(self, m: Node, draft_stage: Optional[str],
                         pu: str) -> None:
@@ -685,7 +730,7 @@ class PagedKVCache:
             self.hit_declined += declined
             n.payload["kv_hit_declined"] = (
                 n.payload.get("kv_hit_declined", 0) + declined)
-            self._events.append(("kv_hit_declined", n))
+            self._events.append((EV_KV_HIT_DECLINED, n))
             hits = hits[:keep]
         if not hits:
             return
@@ -703,7 +748,7 @@ class PagedKVCache:
         n.payload["kv_hit_pages"] = tuple(hits)
         self.hits += len(hits)
         self.hit_tokens += trim
-        self._events.append(("kv_page_hit", n))
+        self._events.append((EV_KV_PAGE_HIT, n))
 
     def _min_fetch(self, stage: str, src: str, tokens: int
                    ) -> Optional[float]:
@@ -875,7 +920,7 @@ class PagedKVCache:
                 node.payload.get("kv_prefetches", 0) + 1)
             node.payload["kv_prefetch_bytes"] = (
                 node.payload.get("kv_prefetch_bytes", 0.0) + by)
-            self._events.append(("kv_prefetch", node))
+            self._events.append((EV_KV_PREFETCH, node))
             self._prefetch_q.append(
                 (stage, tier, dst_pu, take_toks, credit))
             spent += credit

@@ -221,3 +221,17 @@ class KVResidency:
         until session end (total resident bytes return to zero once every
         stream has finished)."""
         self._streams.pop(stream_key(m), None)
+
+    # -- runtime invariants (REPRO_CHECK=1) ----------------------------------
+    def check_quiescent(self) -> None:
+        """Assert the release guarantee above actually held: once a run
+        drains, no stream is still tracked and total resident bytes are
+        back to zero.  Called by both backends at end of run when
+        ``REPRO_CHECK=1`` (see ``core/checks.py``)."""
+        from repro.core.checks import invariant
+        invariant(not self._streams,
+                  "KVResidency quiescence: streams still tracked at end "
+                  f"of run: {sorted(self._streams)[:6]}")
+        invariant(self.resident_bytes() == 0.0,
+                  "KVResidency quiescence: resident bytes nonzero at end "
+                  f"of run: {self.resident_bytes()}")

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.dag import DynamicDAG, Node
+from repro.core.dag import DONE, READY, DynamicDAG, Node
 from repro.core.perf_model import LinearPerfModel
 
 DEFAULT_BATCH_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -113,7 +113,7 @@ def partition_node(dag: DynamicDAG, node: Node, perf: LinearPerfModel,
     every sub-stage) unless the successor is itself partitionable per item —
     the workflow builders create per-item edges where semantics allow
     (e.g. first search need not wait for later rewrites, §3.1)."""
-    if node.kind != "batchable" or node.status != "ready":
+    if node.kind != "batchable" or node.status != READY:
         return [node]
     n_star, _ = best_batch(perf, node.stage, pu, node.workload, candidates)
     if n_star >= node.workload:
@@ -135,7 +135,7 @@ def partition_node(dag: DynamicDAG, node: Node, perf: LinearPerfModel,
         i += 1
     # retire the original node (it was never dispatched)
     node.workload = 0
-    node.status = "done"
+    node.status = DONE
     node.finish = node.start = 0.0
     for s in succ:
         s.deps.discard(node.id)

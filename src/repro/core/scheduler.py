@@ -29,14 +29,26 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core import concurrency as cc
 from repro.core import criticality as crit
 from repro.core.batch_policy import ArrivalTracker, make_policy
-from repro.core.dag import (DynamicDAG, Node, WorkflowTemplate,
-                            resolve_prefer_pu)
+from repro.core.dag import (READY, RUNNING, DynamicDAG, Node,
+                            WorkflowTemplate, resolve_prefer_pu)
 from repro.core.kv_pages import PagedKVCache
 from repro.core.kv_residency import KVResidency, _kv_members
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     shape_aware_configs)
 from repro.core.perf_model import LinearPerfModel
 from repro.core.spec_decode import SpecTracker, draft_stage_of, spec_passes
+
+
+# Boolean SchedulerConfig knobs that legitimately default ON: the paper's
+# baseline HeRo strategy (partition + criticality + concurrency control)
+# and continuous decode batching, which is a no-op until ``coalesce``
+# gates it.  Every OTHER boolean knob is a feature gate and must default
+# off so a default config stays bit-identical to the PR 2/3 goldens —
+# repro.analysis.lint rule CFG001 enforces exactly this list.
+BASELINE_ON_KNOBS = frozenset({
+    "enable_partition", "enable_criticality", "enable_concurrency",
+    "decode_batch",
+})
 
 
 @dataclass
@@ -346,7 +358,7 @@ class HeroScheduler:
             v_star = max(pool, key=lambda n: n.criticality,
                          default=None) if pool else None        # line 7
             running_star = (v_star if v_star is not None
-                            and v_star.status == "running" else
+                            and v_star.status == RUNNING else
                             next(iter(sorted(running,
                                              key=lambda n: -n.criticality)),
                                  None))
@@ -561,7 +573,7 @@ class HeroScheduler:
             # the next dispatches' page staging with it
             self._prefetch_pass(dag, decisions, busy_until, now)
         for f in fused_new:
-            if f.status == "ready":       # never dispatched: dissolve so
+            if f.status == READY:       # never dispatched: dissolve so
                 dag.unfuse(f)             # members stay schedulable
                 self._fifo_seq.pop(f.id, None)
             elif f.payload.get("decode_round"):

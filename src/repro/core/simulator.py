@@ -20,7 +20,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.dag import DynamicDAG, Node
+from repro.core.dag import DONE, READY, DynamicDAG, Node
+from repro.core.events import (EV_CANCELLED, EV_DONE, EV_KV_FETCH,
+                               EV_KV_MIGRATE, EV_PREEMPT, EV_REDISPATCH,
+                               EV_START, EV_TOKENS, SPILL_TIERS)
 from repro.core.partitioner import (ceil_passes, dispatch_passes,
                                     fused_boundary_index)
 from repro.core.perf_model import Config, GroundTruthPerf
@@ -84,8 +87,8 @@ class Simulator:
         is_round = bool(node.payload.get("decode_round"))
         for m in node.payload.get("members", ()):
             ev = event
-            if is_round and event == "done" and m.status != "done":
-                ev = "tokens"
+            if is_round and event == EV_DONE and m.status != DONE:
+                ev = EV_TOKENS
             self._note(timeline, t, ev, m)
 
     # -- main loop -----------------------------------------------------------
@@ -203,7 +206,7 @@ class Simulator:
             dag.mark_done(nid, t)
             if prog is not None and done.node.kind == "stream_decode":
                 prog(dag, done.node, done.node.workload)
-            self._note(timeline, t, "done", done.node)
+            self._note(timeline, t, EV_DONE, done.node)
             refresh_rates()
             dispatch(t)
         result.makespan = dag.makespan()
@@ -260,13 +263,19 @@ class Simulator:
                 # page-granularly and may source from the spill tiers
                 # ("dram"/"disk" — a fetch, priced by the tier model);
                 # tier_transfer_cost is migrate_cost exactly on PU pairs
+                migrated = set()
                 for m, src, ctx, _by in self.sched.kv.migrate_for_dispatch(
                         d.node, d.pu):
                     sm = self.gt.stages.get(m.stage, stage)
                     work += self.gt.tier_transfer_cost(sm, src, d.pu, ctx)
-                    self._note(timeline, now,
-                               "kv_fetch" if src in ("dram", "disk")
-                               else "kv_migrate", m)
+                    if src in SPILL_TIERS:
+                        self._note(timeline, now, EV_KV_FETCH, m)
+                    elif m.id not in migrated:
+                        # one event per stream per dispatch: a gather from
+                        # several PU arenas is still one cache move, so the
+                        # timeline matches kv_migrations exactly
+                        migrated.add(m.id)
+                        self._note(timeline, now, EV_KV_MIGRATE, m)
             if getattr(self.sched.kv, "paged", False):
                 # paged KV accounting accrued since the last dispatch:
                 # spill transfers (evictions cascading down the tiers) are
@@ -312,7 +321,7 @@ class Simulator:
             work_total=work)
         if d.pu != "io":              # io = network, unbounded concurrency
             pu_free[d.pu] = False
-        self._note(timeline, now, "start", d.node)
+        self._note(timeline, now, EV_START, d.node)
 
     def _apply_preemptions(self, dag: DynamicDAG, active, t,
                            timeline) -> List[Node]:
@@ -342,7 +351,7 @@ class Simulator:
             a.work_left = max(a.work_total - done_s, 0.0)
             a.predicted *= scale
             for m in released:
-                self._note(timeline, t, "preempt", m)
+                self._note(timeline, t, EV_PREEMPT, m)
             released_all.extend(released)
         return released_all
 
@@ -352,31 +361,31 @@ class Simulator:
         are aborted (PU freed, node finalized as cancelled) — then one
         more sweep catches successors the aborts just readied."""
         for n in dag.reap_cancelled(t):
-            self._note(timeline, t, "cancelled", n)
+            self._note(timeline, t, EV_CANCELLED, n)
         for nid in [k for k, a in active.items()
                     if a.node.payload.get("cancel_requested")]:
             a = active.pop(nid)
             if a.pu != "io":
                 pu_free[a.pu] = True
             n = a.node
-            n.status, n.finish = "done", t
+            n.status, n.finish = DONE, t
             n.expander = None
             n.payload["cancelled"] = True
             if dag.kv is not None and n.kind == "stream_decode":
                 dag.kv.release(n)
             for s in dag._succ.get(nid, ()):
                 dag._refresh_status(dag.nodes[s])
-            self._note(timeline, t, "cancelled", n)
+            self._note(timeline, t, EV_CANCELLED, n)
         if dag._cancel_pending:
             for n in dag.reap_cancelled(t):
-                self._note(timeline, t, "cancelled", n)
+                self._note(timeline, t, EV_CANCELLED, n)
 
     def _cancel(self, nid: str, active, pu_free, timeline, t):
         task = active.pop(nid)
         if task.pu != "io":
             pu_free[task.pu] = True
         n = task.node
-        n.status = "ready"   # back to the pool; scheduler will remap
+        n.status = READY     # back to the pool; scheduler will remap
         n.start, n.config = -1.0, None
         n.payload["redispatches"] = n.payload.get("redispatches", 0) + 1
-        self._note(timeline, t, "redispatch", n)
+        self._note(timeline, t, EV_REDISPATCH, n)

@@ -24,7 +24,11 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.dag import DynamicDAG, Node
+from repro.core.dag import DONE, READY, RUNNING, DynamicDAG, Node
+from repro.core.events import (EV_CANCELLED, EV_DONE, EV_KV_FETCH,
+                               EV_KV_MIGRATE, EV_PREEMPT, EV_RETRY,
+                               EV_START, EV_STRAGGLER, EV_TOKENS,
+                               SPILL_TIERS)
 from repro.core.partitioner import dispatch_passes, fused_boundary_index
 from repro.core.scheduler import Dispatch, HeroScheduler
 
@@ -120,8 +124,8 @@ class HeroRuntime:
         is_round = bool(node.payload.get("decode_round"))
         for m in node.payload.get("members", ()):
             ev = event
-            if is_round and event == "done" and m.status != "done":
-                ev = "tokens"
+            if is_round and event == EV_DONE and m.status != DONE:
+                ev = EV_TOKENS
             self._emit(t, ev, m)
 
     def add_executor(self, name: str, ex: PUExecutor):
@@ -173,23 +177,23 @@ class HeroRuntime:
                 # (the running fn is non-preemptible — it drains
                 # off-book, exactly like a cancelled straggler)
                 for n in dag.reap_cancelled(now()):
-                    self._emit(now(), "cancelled", n)
+                    self._emit(now(), EV_CANCELLED, n)
                 for nid in [k for k, (_tk, dd, _r) in inflight.items()
                             if dd.node.payload.get("cancel_requested")]:
                     tk, dd, _r = inflight.pop(nid)
                     tk.cancelled = True
                     n = dd.node
-                    n.status, n.finish = "done", now()
+                    n.status, n.finish = DONE, now()
                     n.expander = None
                     n.payload["cancelled"] = True
                     if dag.kv is not None and n.kind == "stream_decode":
                         dag.kv.release(n)
                     for s in dag._succ.get(nid, ()):
                         dag._refresh_status(dag.nodes[s])
-                    self._emit(now(), "cancelled", n)
+                    self._emit(now(), EV_CANCELLED, n)
                 if dag._cancel_pending:
                     for n in dag.reap_cancelled(now()):
-                        self._emit(now(), "cancelled", n)
+                        self._emit(now(), EV_CANCELLED, n)
             # io is unbounded concurrency (network threads), matching the
             # simulator — a sleeping web call or admission timer must not
             # block the io lane for other queries
@@ -244,7 +248,7 @@ class HeroRuntime:
                     if released:
                         d.node.payload["preempt_yield"] = True
                         for m in released:
-                            self._emit(now(), "preempt", m)
+                            self._emit(now(), EV_PREEMPT, m)
                         progressed = True
                 if task.done_evt.is_set():
                     del inflight[nid]
@@ -253,7 +257,7 @@ class HeroRuntime:
                         continue
                     if task.error is not None:
                         if retries < self.max_retries:
-                            self._emit(now(), "retry", d.node)
+                            self._emit(now(), EV_RETRY, d.node)
                             self._launch(d, inflight, dag,
                                          retries=retries + 1, now_t=now())
                             continue
@@ -280,7 +284,7 @@ class HeroRuntime:
                     dag.mark_done(nid, now())
                     if prog is not None and d.node.kind == "stream_decode":
                         prog(dag, d.node, d.node.workload)
-                    self._emit(now(), "done", d.node)
+                    self._emit(now(), EV_DONE, d.node)
                 elif task.started and not task.cancelled:
                     # straggler heartbeat (perf-model ETA as the prior, with
                     # a jitter floor and a per-node speculation cap)
@@ -291,8 +295,8 @@ class HeroRuntime:
                     if (can_spec and d.pu in self.executors
                             and time.monotonic() - task.started > eta):
                         task.cancelled = True
-                        self._emit(now(), "straggler", d.node)
-                        d.node.status = "ready"
+                        self._emit(now(), EV_STRAGGLER, d.node)
+                        d.node.status = READY
                         d.node.start, d.node.config = -1.0, None
                         d.node.payload["redispatches"] = \
                             d.node.payload.get("redispatches", 0) + 1
@@ -301,7 +305,7 @@ class HeroRuntime:
                     elif d.pu not in self.executors:
                         # PU left the fleet: re-queue
                         task.cancelled = True
-                        d.node.status = "ready"
+                        d.node.status = READY
                         d.node.start, d.node.config = -1.0, None
                         del inflight[nid]
                         progressed = True
@@ -324,10 +328,16 @@ class HeroRuntime:
             # (wall-clock transfer cost is the stage fn's to pay — here it
             # is recorded, not slept).  Paged trackers may gather from the
             # spill tiers: those moves are fetches, not migrations
+            migrated = set()
             for m, src, _ctx, _by in self.sched.kv.migrate_for_dispatch(
                     d.node, d.pu):
-                self._emit(now_t, "kv_fetch" if src in ("dram", "disk")
-                           else "kv_migrate", m)
+                if src in SPILL_TIERS:
+                    self._emit(now_t, EV_KV_FETCH, m)
+                elif m.id not in migrated:
+                    # one event per stream per dispatch (multi-arena
+                    # gathers are one cache move), matching kv_migrations
+                    migrated.add(m.id)
+                    self._emit(now_t, EV_KV_MIGRATE, m)
         if getattr(self.sched.kv, "paged", False):
             # paged accounting accrued since the last launch: page events
             # reach the run timeline; spill transfers are recorded in the
@@ -339,7 +349,7 @@ class HeroRuntime:
             self.sched.kv.drain_prefetches()
             for ev, n2 in self.sched.kv.drain_events():
                 self._emit(now_t, ev, n2)
-        if d.node.status != "running":
+        if d.node.status != RUNNING:
             dag.mark_running(d.node.id, now_t, (d.pu, d.batch))
         if d.pu == "io":
             threading.Thread(target=lambda: (setattr(
@@ -348,4 +358,4 @@ class HeroRuntime:
         else:
             self.executors[d.pu].submit(task)
         inflight[d.node.id] = (task, d, retries)
-        self._emit(now_t, "start", d.node)
+        self._emit(now_t, EV_START, d.node)

@@ -1,0 +1,237 @@
+"""repro.analysis.tracecheck — every committed golden/bench artifact
+passes; one seeded mutant per violation class fails."""
+import copy
+import glob
+import json
+import os
+
+import pytest
+
+from repro.analysis.tracecheck import check_trace
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "goldens")
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "benchmarks", "baselines")
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    """The continuous-batching trace golden: has rounds + fan-out."""
+    return _load(os.path.join(GOLDEN_DIR, "trace_pr3_decode_batch.json"))
+
+
+@pytest.fixture(scope="module")
+def kv_trace():
+    return _load(os.path.join(GOLDEN_DIR, "trace_pr6_kv_preempt.json"))
+
+
+def _rules(doc, path="<t>"):
+    return sorted({v.rule for v in check_trace(doc, path)})
+
+
+# --- committed artifacts all pass --------------------------------------------
+
+@pytest.mark.parametrize("path", sorted(
+    glob.glob(os.path.join(GOLDEN_DIR, "*.json"))),
+    ids=lambda p: os.path.basename(p))
+def test_goldens_pass(path):
+    violations = check_trace(_load(path), path)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+@pytest.mark.parametrize("path", sorted(
+    glob.glob(os.path.join(BASELINE_DIR, "serving_*.json"))),
+    ids=lambda p: os.path.basename(p))
+def test_bench_baselines_pass(path):
+    violations = check_trace(_load(path), path)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_trace_goldens_have_real_content(trace, kv_trace):
+    # the suite must not pass vacuously
+    assert any(e[1] == "tokens" for e in trace["events"])
+    assert len(trace["dispatches"]) > 10
+    assert kv_trace["counters"]["kv_migrations"] > 0
+    assert kv_trace["counters"]["kv_page_hits"] > 0
+
+
+# --- lifecycle mutants -------------------------------------------------------
+
+def _first(doc, ev):
+    return next(e for e in doc["events"] if e[1] == ev)
+
+
+def test_tr101_serve_after_completion(trace):
+    m = copy.deepcopy(trace)
+    done = _first(m, "done")
+    m["events"].append([m["makespan"], "start", done[2]])
+    m["counters"]["dispatches"] += 1
+    assert "TR101" in _rules(m)
+
+
+def test_tr102_tokens_on_finished_stream(trace):
+    m = copy.deepcopy(trace)
+    done = _first(m, "done")
+    m["events"].append([m["makespan"], "tokens", done[2]])
+    assert "TR102" in _rules(m)
+
+
+def test_tr104_double_completion(trace):
+    m = copy.deepcopy(trace)
+    done = _first(m, "done")
+    m["events"].append([m["makespan"], "done", done[2]])
+    assert "TR104" in _rules(m)
+
+
+def test_tr105_done_without_start(trace):
+    m = copy.deepcopy(trace)
+    m["events"].remove(_first(m, "start"))
+    rules = _rules(m)
+    assert "TR105" in rules and "TR304" in rules   # also a counter drift
+
+
+def test_tr106_redispatch_on_finished_node(trace):
+    m = copy.deepcopy(trace)
+    done = _first(m, "done")
+    m["events"].append([m["makespan"], "redispatch", done[2]])
+    m["counters"]["redispatches"] += 1
+    assert "TR106" in _rules(m)
+
+
+# --- PU serialization mutants ------------------------------------------------
+
+def test_tr202_double_serve(trace):
+    m = copy.deepcopy(trace)
+    by_pu = {}
+    for d in m["dispatches"]:
+        if d["pu"] != "io":
+            by_pu.setdefault(d["pu"], []).append(d)
+    lst = next(sorted(l, key=lambda d: d["t0"])
+               for l in by_pu.values() if len(l) >= 2)
+    # stretch the first serve interval into the second: a double-serve
+    lst[0]["t1"] = lst[1]["t0"] + (lst[1]["t1"] - lst[1]["t0"]) / 2 + 0.01
+    assert "TR202" in _rules(m)
+
+
+def test_tr201_interval_ends_before_start(trace):
+    m = copy.deepcopy(trace)
+    d = m["dispatches"][0]
+    d["t0"], d["t1"] = d["t1"] + 1.0, d["t0"]
+    assert "TR201" in _rules(m)
+
+
+def test_io_concurrency_is_exempt():
+    doc = {"schema": "repro.trace/v1", "makespan": 2.0, "events": [],
+           "counters": {}, "pu_busy": {},
+           "dispatches": [{"node": "a", "pu": "io", "t0": 0.0, "t1": 1.0},
+                          {"node": "b", "pu": "io", "t0": 0.5, "t1": 1.5}]}
+    assert check_trace(doc) == []
+
+
+# --- conservation mutants ----------------------------------------------------
+
+def test_tr301_unknown_event_name(trace):
+    m = copy.deepcopy(trace)
+    m["events"].append([0.0, "kv_migrat", "q0/x"])
+    assert "TR301" in _rules(m)
+
+
+def test_tr302_event_past_makespan(trace):
+    m = copy.deepcopy(trace)
+    m["makespan"] = m["events"][-1][0] / 2
+    assert "TR302" in _rules(m)
+
+
+def test_tr303_timeline_goes_backwards(trace):
+    m = copy.deepcopy(trace)
+    ev = copy.deepcopy(m["events"][-1])
+    ev[0] = -0.5
+    m["events"].append(ev)
+    rules = _rules(m)
+    assert "TR303" in rules or "TR302" in rules
+
+
+def test_tr304_counter_event_drift(kv_trace):
+    m = copy.deepcopy(kv_trace)
+    m["counters"]["kv_migrations"] += 1
+    assert "TR304" in _rules(m)
+
+
+def test_tr305_drained_events_exceed_counter(kv_trace):
+    m = copy.deepcopy(kv_trace)
+    m["counters"]["kv_page_hits"] = 0
+    assert "TR305" in _rules(m)
+
+
+def test_tr307_bytes_moved_without_migrations(kv_trace):
+    m = copy.deepcopy(kv_trace)
+    n = m["counters"]["kv_migrations"]
+    m["counters"]["kv_migrations"] = 0
+    m["events"] = [e for e in m["events"] if e[1] != "kv_migrate"]
+    m["dispatches"] = m["dispatches"]
+    assert n > 0 and "TR307" in _rules(m)
+
+
+def test_tr308_accepted_exceeds_drafted():
+    spec = _load(os.path.join(GOLDEN_DIR, "trace_pr9_specdec.json"))
+    m = copy.deepcopy(spec)
+    m["counters"]["accepted_tokens"] = m["counters"]["drafted_tokens"] + 1
+    assert "TR308" in _rules(m)
+
+
+def test_tr309_pu_busy_exceeds_makespan(trace):
+    m = copy.deepcopy(trace)
+    pu = next(iter(m["pu_busy"]))
+    m["pu_busy"][pu] = m["makespan"] * 2
+    assert "TR309" in _rules(m)
+
+
+# --- bench-artifact mutants --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bench():
+    return _load(os.path.join(BASELINE_DIR, "serving_specdec.json"))
+
+
+def _first_row(doc):
+    regime = next(iter(doc["regimes"]))
+    system = next(iter(doc["regimes"][regime]))
+    return doc["regimes"][regime][system]
+
+
+def test_bn301_negative_metric(bench):
+    m = copy.deepcopy(bench)
+    _first_row(m)["p50"] = -1.0
+    assert "BN301" in _rules(m)
+
+
+def test_bn302_p50_above_p99(bench):
+    m = copy.deepcopy(bench)
+    row = _first_row(m)
+    row["p50"] = row["p99"] * 2 + 1
+    assert "BN302" in _rules(m)
+
+
+def test_bn303_accepted_above_drafted(bench):
+    m = copy.deepcopy(bench)
+    row = _first_row(m)
+    row["accepted"] = row.get("drafted", 0) + 5
+    assert "BN303" in _rules(m)
+
+
+# --- flat makespan goldens ---------------------------------------------------
+
+def test_gl301_nonpositive_makespan():
+    m = _load(os.path.join(GOLDEN_DIR, "pr2_coalesce_off.json"))
+    m = copy.deepcopy(m)
+    m["staggered8_w1_makespans"][0] = 0.0
+    assert "GL301" in _rules(m)
+
+
+def test_schema_sniffing_rejects_non_object():
+    assert [v.rule for v in check_trace([1, 2, 3])] == ["TR000"]

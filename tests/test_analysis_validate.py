@@ -1,0 +1,235 @@
+"""repro.analysis.validate — the builtin W1-W3 specs (and their built
+DAGs) validate clean; handcrafted broken specs trip each issue code; the
+``SessionOptions.validate_spec`` wiring surfaces errors before a run."""
+import warnings
+
+import pytest
+
+from repro.analysis.validate import (SpecValidationError, ensure_valid,
+                                     validate_dag, validate_spec)
+from repro.api.options import SessionOptions
+from repro.api.spec import (BranchGroup, BranchStage, CollectorSpec,
+                            DecodeSpec, StageSpec, WorkflowSpec,
+                            builtin_spec)
+from repro.core.dag import DynamicDAG, Node
+from repro.rag import sample_traces
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return sample_traces("hotpotqa", 1, seed=11)[0]
+
+
+def _codes(issues):
+    return sorted(i.code for i in issues)
+
+
+def _spec(statics, groups=(), collector=None, name="t"):
+    return WorkflowSpec(name=name, statics=tuple(statics),
+                        groups=tuple(groups), collector=collector)
+
+
+def _chain(*ids_kinds):
+    """Linear prefill->decode chain helper: [(id, stage, kind), ...]."""
+    out, prev = [], None
+    for sid, stage, kind in ids_kinds:
+        out.append(StageSpec(id=sid, stage=stage, kind=kind, workload=8,
+                             deps=(prev,) if prev else ()))
+        prev = sid
+    return out
+
+
+GOOD = _chain(("embed", "embed", "batchable"),
+              ("pf", "chat_prefill", "stream_prefill"),
+              ("dc", "chat_decode", "stream_decode"))
+
+
+# --- builtin specs and DAGs validate clean -----------------------------------
+
+@pytest.mark.parametrize("wf", [1, 2, 3])
+def test_builtin_specs_clean(wf, trace):
+    spec = builtin_spec(wf)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        assert ensure_valid(spec=spec) == []
+        assert ensure_valid(dag=spec.build_dag(trace)) == []
+
+
+def test_build_dag_validate_kwarg(trace):
+    # the SessionOptions.validate_spec wiring point
+    dag = builtin_spec(1).build_dag(trace, validate=True)
+    assert dag.nodes
+
+
+def test_session_option_runs_validation(trace):
+    from repro.api import HeroSession
+    sess = HeroSession(world="sd8gen4", family="qwen3",
+                       options=SessionOptions(validate_spec=True))
+    sess.submit(trace, wf=1)
+    [res] = sess.run()
+    assert res.makespan > 0
+
+
+# --- spec-level error codes --------------------------------------------------
+
+def test_s001_duplicate_static_id():
+    s = GOOD[0]
+    assert "S001" in _codes(validate_spec(_spec([s, s])))
+
+
+def test_s002_unknown_dep():
+    bad = GOOD[:2] + [StageSpec(id="dc", stage="chat_decode",
+                                kind="stream_decode", workload=8,
+                                deps=("missing",))]
+    assert "S002" in _codes(validate_spec(_spec(bad)))
+
+
+def test_s003_dependency_cycle():
+    a = StageSpec(id="a", stage="embed", kind="batchable", workload=1,
+                  deps=("b",))
+    b = StageSpec(id="b", stage="rerank", kind="batchable", workload=1,
+                  deps=("a",))
+    issues = validate_spec(_spec([a, b] + GOOD))
+    assert "S003" in _codes(issues)
+
+
+def test_s004_unknown_group_source():
+    g = BranchGroup(source="nope", count=2, stages=(
+        BranchStage(id="b{i}", stage="embed", kind="batchable",
+                    workload=1, deps=("$source",), template="b"),))
+    assert "S004" in _codes(validate_spec(_spec(GOOD, groups=[g])))
+
+
+def test_s005_bad_branch_dep_token():
+    g = BranchGroup(source="embed", count=2, stages=(
+        BranchStage(id="b{i}", stage="embed", kind="batchable",
+                    workload=1, deps=("$prev",), template="b"),))
+    issues = validate_spec(_spec(GOOD, groups=[g]))
+    assert "S005" in _codes(issues)       # $prev on the first branch stage
+    g2 = BranchGroup(source="embed", count=2, stages=(
+        BranchStage(id="b{i}", stage="embed", kind="batchable",
+                    workload=1, deps=("$sorce",), template="b"),))
+    assert "S005" in _codes(validate_spec(_spec(GOOD, groups=[g2])))
+
+
+def test_s006_branch_id_without_placeholder():
+    g = BranchGroup(source="embed", count=2, stages=(
+        BranchStage(id="branch", stage="embed", kind="batchable",
+                    workload=1, deps=("$source",), template="b"),))
+    assert "S006" in _codes(validate_spec(_spec(GOOD, groups=[g])))
+
+
+def test_s007_unknown_collector_base_dep():
+    col = CollectorSpec(base_dep="nope")
+    assert "S007" in _codes(validate_spec(_spec(GOOD, collector=col)))
+
+
+def test_s008_draft_pins_on_non_decode_stage():
+    bad = GOOD[:2] + [StageSpec(
+        id="dc", stage="chat_decode", kind="stream_decode", workload=8,
+        deps=("pf",))]
+    bad[0] = StageSpec(id="embed", stage="embed", kind="batchable",
+                       workload=1, decode=DecodeSpec(draft_width=4))
+    assert "S008" in _codes(validate_spec(_spec(bad)))
+
+
+# --- spec-level warnings -----------------------------------------------------
+
+def test_w101_shared_ctx_off_convention():
+    bad = [StageSpec(id="pf", stage="summarize", kind="stream_prefill",
+                     workload=64, shared_ctx=32),
+           StageSpec(id="dc", stage="chat_decode", kind="stream_decode",
+                     workload=8, deps=("pf",))]
+    assert "W101" in _codes(validate_spec(_spec(bad)))
+    # DecodeSpec.kv_stage override silences it
+    ok = [StageSpec(id="pf", stage="summarize", kind="stream_prefill",
+                    workload=64, shared_ctx=32,
+                    decode=DecodeSpec(kv_stage="chat_decode")),
+          bad[1]]
+    assert "W101" not in _codes(validate_spec(_spec(ok)))
+
+
+def test_w103_prefill_decode_family_mismatch():
+    bad = [StageSpec(id="pf", stage="refine_prefill", kind="stream_prefill",
+                     workload=64),
+           StageSpec(id="dc", stage="chat_decode", kind="stream_decode",
+                     workload=8, deps=("pf",))]
+    assert "W103" in _codes(validate_spec(_spec(bad)))
+
+
+def test_w104_collector_convention_mismatch():
+    col = CollectorSpec(base_dep="embed", refine_prefill="refine_prefill",
+                        refine_decode="chat_decode")
+    assert "W104" in _codes(validate_spec(_spec(GOOD, collector=col)))
+
+
+def test_w105_dangling_static():
+    dangling = GOOD + [StageSpec(id="orphan", stage="rerank",
+                                 kind="batchable", workload=4)]
+    assert "W105" in _codes(validate_spec(_spec(dangling)))
+    assert "W105" not in _codes(validate_spec(_spec(GOOD)))
+
+
+# --- graph-level codes -------------------------------------------------------
+
+def test_d001_dag_cycle():
+    dag = DynamicDAG()
+    dag.add(Node("a", "embed", "batchable", 1))
+    dag.add(Node("b", "rerank", "batchable", 1, deps={"a"}))
+    dag.nodes["a"].deps.add("b")     # forged after add() to make a cycle
+    assert "D001" in _codes(validate_dag(dag))
+
+
+def test_d002_unknown_dep_in_graph():
+    dag = DynamicDAG()
+    dag.add(Node("a", "embed", "batchable", 1))
+    dag.nodes["a"].deps.add("ghost")
+    assert "D002" in _codes(validate_dag(dag))
+
+
+def test_d003_no_coalesce_with_batch_pu():
+    dag = DynamicDAG()
+    dag.add(Node("a", "chat_decode", "stream_decode", 8,
+                 payload={"no_coalesce": True, "batch_pu": "gpu"}))
+    assert "D003" in _codes(validate_dag(dag))
+
+
+def test_d004_round_without_members():
+    dag = DynamicDAG()
+    dag.add(Node("r", "chat_decode", "stream_decode", 8,
+                 payload={"decode_round": True}))
+    assert "D004" in _codes(validate_dag(dag))
+
+
+def test_d005_negative_kv_ctx():
+    dag = DynamicDAG()
+    dag.add(Node("a", "chat_decode", "stream_decode", 8,
+                 payload={"kv_ctx": -4}))
+    assert "D005" in _codes(validate_dag(dag))
+
+
+def test_clean_dag_validates(trace):
+    assert validate_dag(builtin_spec(2).build_dag(trace)) == []
+
+
+# --- enforcement semantics ---------------------------------------------------
+
+def test_ensure_valid_raises_on_errors_warns_on_warnings():
+    s = GOOD[0]
+    with pytest.raises(SpecValidationError) as ei:
+        ensure_valid(spec=_spec([s, s]))
+    assert any(i.code == "S001" for i in ei.value.issues)
+    dangling = GOOD + [StageSpec(id="orphan", stage="rerank",
+                                 kind="batchable", workload=4)]
+    with pytest.warns(RuntimeWarning, match="W105"):
+        ensure_valid(spec=_spec(dangling))
+
+
+def test_session_surfaces_spec_error_before_run(trace):
+    from repro.api import HeroSession
+    s = GOOD[0]
+    sess = HeroSession(world="sd8gen4", family="qwen3",
+                       options=SessionOptions(validate_spec=True))
+    sess.submit(trace, spec=_spec([s, s]))
+    with pytest.raises(SpecValidationError):
+        sess.run()
